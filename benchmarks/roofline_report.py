@@ -1,0 +1,81 @@
+"""§Dry-run / §Roofline report generator: reads results/dryrun/*.json and
+emits the markdown tables consumed by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh="16x16", variant="baseline") -> list:
+    rows = []
+    for p in sorted(RESULTS.glob(f"*_{mesh}_{variant}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def fmt_bytes(b):
+    if b > 1 << 30:
+        return f"{b / (1<<30):.1f}G"
+    return f"{b / (1<<20):.0f}M"
+
+
+def roofline_table(mesh="16x16", variant="baseline") -> str:
+    rows = load(mesh, variant)
+    out = ["| arch | shape | compute s | memory s | collective s | bound | "
+           "HLO GF/chip | model/HLO | proj MFU | mem/chip |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+            f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+            f"**{rf['dominant']}** | {rf['flops']/1e9:.0f} | "
+            f"{rf['useful_fraction']*100:.0f}% | {rf['mfu']*100:.2f}% | "
+            f"{fmt_bytes(r['memory']['per_device_total'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(variant="baseline") -> str:
+    single = {(r["arch"], r["shape"]): r for r in load("16x16", variant)}
+    multi = {(r["arch"], r["shape"]): r for r in load("2x16x16", variant)}
+    out = ["| arch | shape | 16x16 compile | mem/chip | 2x16x16 compile | "
+           "mem/chip | collective bytes/chip (single) |",
+           "|---|---|---|---|---|---|---|"]
+    for key in sorted(single):
+        s = single[key]
+        m = multi.get(key)
+        out.append(
+            f"| {key[0]} | {key[1]} | {s['compile_s']:.0f}s | "
+            f"{fmt_bytes(s['memory']['per_device_total'])} | "
+            f"{(str(round(m['compile_s']))+'s') if m else '—'} | "
+            f"{fmt_bytes(m['memory']['per_device_total']) if m else '—'} | "
+            f"{fmt_bytes(s['roofline']['collective_bytes'])} |")
+    return "\n".join(out)
+
+
+def run() -> list:
+    rows = load()
+    if not rows:
+        return [dict(name="roofline.cells", value=0,
+                     derived="run repro.launch.sweep first")]
+    worst = min(rows, key=lambda r: r["roofline"]["mfu"])
+    coll = max(rows, key=lambda r: r["roofline"]["collective_s"])
+    return [
+        dict(name="roofline.cells_baselined", value=len(rows),
+             derived="single-pod baseline cells with full terms"),
+        dict(name="roofline.worst_mfu_pct",
+             value=worst["roofline"]["mfu"] * 100,
+             derived=f"{worst['arch']} x {worst['shape']}"),
+        dict(name="roofline.most_collective_bound_s",
+             value=coll["roofline"]["collective_s"],
+             derived=f"{coll['arch']} x {coll['shape']}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("## Single-pod roofline (baseline)\n")
+    print(roofline_table())
+    print("\n## Dry-run summary\n")
+    print(dryrun_table())

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,value,derived`` CSV rows (value unit embedded in name)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = [
+    ("dedup_cdf", "Fig 5 / §3 dedup statistics"),
+    ("cache_hits", "Fig 7/8 tiered hit rates + LRU-k"),
+    ("erasure_latency", "Fig 9 4-of-5 vs 4-of-4"),
+    ("l2_latency", "Fig 10 L2 GET/PUT latency"),
+    ("e2e_read_latency", "Fig 11 end-to-end read modes"),
+    ("parity_kernel", "Listings 1/2 parity vectorization"),
+    ("coldstart", "cold-start scale-out"),
+    ("roofline_report", "dry-run roofline summary"),
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived")
+    failures = 0
+    for mod_name, desc in BENCHES:
+        if only and only != mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            rows = mod.run()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{mod_name}.ERROR,nan,\"{type(e).__name__}: {e}\"")
+            failures += 1
+            continue
+        for r in rows:
+            derived = str(r.get("derived", "")).replace('"', "'")
+            print(f"{r['name']},{r['value']:.6g},\"{derived}\"")
+        print(f"{mod_name}.wall_seconds,{time.time()-t0:.2f},\"{desc}\"")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Serve a fleet of fine-tunes from one base model — the paper's
+multi-tenant story mapped to model serving.
+
+Ten fine-tunes share a base; each replica cold-starts by demand-loading
+its image through L1/L2/origin. The chunk store deduplicates the base
+weights so the fleet's data movement is bounded by unique bytes, and the
+erasure-coded L2 keeps cold-start tails flat even with a failed node.
+
+Run: PYTHONPATH=src python examples/serve_finetunes.py
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cache.distributed import DistributedCache
+from repro.core.cache.local import LocalCache
+from repro.core.concurrency import RejectingLimiter
+from repro.core.gc import GenerationalGC
+from repro.core.loader import create_image
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+from repro.models import build_model
+from repro.serve.coldstart import cold_start
+from repro.serve.engine import Request
+from repro.train.checkpoint import state_to_tree
+
+
+def main():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    base = model.init(jax.random.key(0))
+    base_tree = state_to_tree(base)
+
+    store = ChunkStore(tempfile.mkdtemp())
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(0)
+
+    print("== uploading 10 fine-tunes (each touches ~1 tensor) ==")
+    blobs = []
+    for i in range(10):
+        ft = dict(base_tree)
+        victim = sorted(base_tree)[i % len(base_tree)]
+        ft[victim] = ft[victim] + rng.standard_normal(ft[victim].shape).astype(ft[victim].dtype) * 0.01
+        blob, s = create_image(ft, tenant=f"team{i}", tenant_key=b"%02d" % i * 16,
+                               store=store, root=gc.active, chunk_size=65536,
+                               image_id=f"ft{i}")
+        blobs.append(blob)
+        print(f"   ft{i}: unique={s.unique_chunks:3d} dedup={s.dedup_chunks:3d} "
+              f"({s.unique_fraction:5.1%} unique)")
+
+    l2 = DistributedCache(num_nodes=6, seed=1)
+    lim = RejectingLimiter(4)
+    victim_node = sorted(l2.nodes)[0]
+
+    print(f"== cold-starting 10 replicas (node {victim_node} failed "
+          f"after the 3rd start) ==")
+    for i, blob in enumerate(blobs):
+        if i == 3:
+            l2.fail_node(victim_node)   # erasure coding must hide this
+        l1 = LocalCache(64 << 20, name=f"worker{i % 4}")
+        t0 = time.time()
+        eng, stats = cold_start(model, blob, b"%02d" % i * 16, store,
+                                l1=l1, l2=l2, limiter=lim,
+                                max_batch=2, max_len=32)
+        req = Request(0, prompt=[11, 22, 33], max_new=4)
+        eng.submit(req)
+        eng.run_until_drained()
+        print(f"   replica {i}: load {stats['load_seconds']*1e3:6.0f}ms  "
+              f"origin_fetches={stats['origin_fetches']:3.0f}  "
+              f"tokens={req.out}")
+    print(f"== fleet stats ==")
+    snap = COUNTERS.snapshot()
+    print(f"   chunks uploaded once: {snap.get('store.chunks_uploaded', 0):.0f}; "
+          f"dedup hits at creation: {snap.get('store.dedup_hits', 0):.0f}")
+    print(f"   L2 hit rate {l2.hit_rate:.3f} with one node down "
+          f"(constant-work 4-of-5 reads)")
+
+
+if __name__ == "__main__":
+    main()

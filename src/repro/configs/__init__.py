@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+)
+from repro.configs.registry import get_config, list_archs  # noqa: F401

@@ -1,0 +1,11 @@
+"""The paper's primary contribution: on-demand, content-addressed,
+convergently-encrypted chunk loading with tiered erasure-coded caching and
+generational GC — serving as this framework's checkpoint/weight
+distribution layer. See DESIGN.md for the mapping."""
+from repro.core.blockdev import CowBlockDevice, TieredReader  # noqa: F401
+from repro.core.erasure import ErasureCoder  # noqa: F401
+from repro.core.gc import GenerationalGC  # noqa: F401
+from repro.core.layout import CHUNK_SIZE, build_layout  # noqa: F401
+from repro.core.loader import ImageReader, create_image  # noqa: F401
+from repro.core.manifest import Manifest, open_manifest, read_public, seal  # noqa: F401
+from repro.core.store import ChunkStore  # noqa: F401

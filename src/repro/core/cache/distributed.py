@@ -1,0 +1,176 @@
+"""L2: the AZ-level distributed cache (paper §4).
+
+Real data paths — consistent-hash placement, two-tier (memory + flash)
+LRU-k storage per node, erasure-coded stripes, constant-work fetch with
+reconstruction from the first k of n responses — plus an injected
+per-request latency model (we are one process, not a fleet) so the Fig
+9/10/11 benchmarks can reproduce the paper's latency distributions.
+
+Constant-work property (paper §4.1): a fetch ALWAYS issues n stripe
+requests and needs any k; node failure or slowness changes nothing about
+the work done, eliminating the retry metastability mode.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cache.hashring import HashRing
+from repro.core.cache.lru_k import LRUK
+from repro.core.erasure import ErasureCoder
+from repro.core.telemetry import COUNTERS, LatencyRecorder
+
+
+class LatencyModel:
+    """Two components, calibrated to the paper's Fig 10/9:
+    server-side service time (GET median <50us, memory tier) and
+    client-observed network time (median ~450us, so client p50 ~500us).
+    Lognormal bodies + occasional heavy tail."""
+
+    def __init__(self, rng: np.random.Generator, serve_median_s: float = 42e-6,
+                 net_median_s: float = 450e-6, sigma: float = 0.3,
+                 tail_p: float = 0.002, tail_scale: float = 8.0):
+        self.rng = rng
+        self.mu_serve = np.log(serve_median_s)
+        self.mu_net = np.log(net_median_s)
+        self.sigma = sigma
+        self.tail_p = tail_p
+        self.tail_scale = tail_scale
+
+    def _tail(self, base: float) -> float:
+        if self.rng.random() < self.tail_p:
+            base *= self.tail_scale * (1 + self.rng.random() * 4)
+        return base
+
+    def serve_sample(self) -> float:
+        return self._tail(float(self.rng.lognormal(self.mu_serve, self.sigma)))
+
+    def net_sample(self) -> float:
+        return self._tail(float(self.rng.lognormal(self.mu_net, self.sigma)))
+
+    def sample(self) -> float:
+        return self.serve_sample() + self.net_sample()
+
+
+class CacheNode:
+    """One L2 server: in-memory hot tier over a flash tier (paper: flash
+    cache with ~10% memory tier)."""
+
+    def __init__(self, name: str, mem_bytes: int, flash_bytes: int,
+                 rng: np.random.Generator, latency: LatencyModel | None = None,
+                 flash_extra_s: float = 120e-6):
+        self.name = name
+        self.mem = LRUK(mem_bytes, k=2)
+        self.flash = LRUK(flash_bytes, k=2)
+        self.latency = latency or LatencyModel(rng)
+        self.flash_extra_s = flash_extra_s
+        self.failed = False
+        self.get_lat = LatencyRecorder(f"{name}.get")
+        self.put_lat = LatencyRecorder(f"{name}.put")
+
+    def get(self, key: str):
+        """Returns (client latency seconds, bytes | None); None = miss.
+        Server-side service time is recorded separately (paper Fig 10)."""
+        if self.failed:
+            return (0.1, None)  # timeout
+        serve = self.latency.serve_sample()
+        v = self.mem.get(key)
+        if v is None:
+            v = self.flash.get(key)
+            if v is not None:
+                serve += self.flash_extra_s
+                self.mem.put(key, v)       # promote
+        self.get_lat.record(serve)
+        return (serve + self.latency.net_sample(), v)
+
+    def put(self, key: str, value: bytes):
+        if self.failed:
+            return 0.1
+        # PUT: write path; lognormal body only (the Rust server's p99.99
+        # stays < 4x median, Fig 10) plus a small writeback mode
+        serve = float(self.latency.rng.lognormal(
+            self.latency.mu_serve, self.latency.sigma)) * 3.0
+        if self.latency.rng.random() < 0.04:
+            serve *= 2.2                   # writeback stall mode (Fig 10)
+        self.flash.put(key, value)
+        self.mem.put(key, value)
+        self.put_lat.record(serve)
+        return serve + self.latency.net_sample()
+
+
+class DistributedCache:
+    """The erasure-coded L2 cluster."""
+
+    def __init__(self, num_nodes: int = 12, k: int = 4, n: int = 5,
+                 mem_bytes: int = 64 << 20, flash_bytes: int = 512 << 20,
+                 seed: int = 0, parity_fn=None):
+        self.rng = np.random.default_rng(seed)
+        self.coder = ErasureCoder(k, n, parity_fn=parity_fn)
+        self.nodes = {f"cache-{i:03d}": CacheNode(
+            f"cache-{i:03d}", mem_bytes, flash_bytes,
+            np.random.default_rng(seed * 1000 + i))
+            for i in range(num_nodes)}
+        self.ring = HashRing(list(self.nodes), vnodes=64)
+        self.fetch_lat = LatencyRecorder("l2.fetch")
+
+    def _stripe_key(self, name: str, i: int) -> str:
+        return f"{name}/s{i}"
+
+    def put_chunk(self, name: str, data: bytes) -> float:
+        stripes = self.coder.encode(data)
+        nodes = self.ring.lookup(name, count=self.coder.n)
+        lat = 0.0
+        for i, node in enumerate(nodes):
+            lat = max(lat, self.nodes[node].put(self._stripe_key(name, i),
+                                                stripes[i]))
+            self.ring.record_placement(node)
+        return lat
+
+    def get_chunk(self, name: str, chunk_len: int):
+        """Constant-work fetch: n parallel stripe requests, reconstruct from
+        the first k arrivals. Returns (latency_s, bytes | None)."""
+        k, n = self.coder.k, self.coder.n
+        nodes = self.ring.lookup(name, count=n)
+        responses = []
+        for i, node in enumerate(nodes):
+            lat, v = self.nodes[node].get(self._stripe_key(name, i))
+            if v is not None:
+                responses.append((lat, i, v))
+        if len(responses) < k:
+            COUNTERS.inc("l2.misses")
+            return (max((r[0] for r in responses), default=0.0), None)
+        responses.sort()
+        lat = responses[k - 1][0]       # k-th fastest completes the read
+        stripes = {i: v for _, i, v in responses[:k]}
+        data = self.coder.decode(stripes, chunk_len)
+        COUNTERS.inc("l2.hits")
+        self.fetch_lat.record(lat)
+        return (lat, data)
+
+    def get_chunk_unreplicated(self, name: str, chunk_len: int):
+        """Comparison path for Fig 9: a hypothetical k-of-k read — all k
+        data stripes required, latency = slowest of k."""
+        k = self.coder.k
+        nodes = self.ring.lookup(name, count=self.coder.n)
+        lats, stripes = [], {}
+        for i, node in enumerate(nodes[:k]):
+            lat, v = self.nodes[node].get(self._stripe_key(name, i))
+            lats.append(lat)
+            if v is not None:
+                stripes[i] = v
+        if len(stripes) < k:
+            return (max(lats), None)
+        return (max(lats), self.coder.decode(stripes, chunk_len))
+
+    def fail_node(self, name: str, failed: bool = True):
+        self.nodes[name].failed = failed
+
+    def flush(self):
+        for node in self.nodes.values():
+            node.mem = LRUK(node.mem.capacity, k=2)
+            node.flash = LRUK(node.flash.capacity, k=2)
+
+    @property
+    def hit_rate(self) -> float:
+        h = COUNTERS.get("l2.hits")
+        m = COUNTERS.get("l2.misses")
+        return h / max(1.0, h + m)

@@ -1,0 +1,79 @@
+"""Consistent hashing with bounded loads (paper §4: Karger ring with the
+Chen/Coleman/Shrivastava-style load-spreading optimization)."""
+from __future__ import annotations
+
+import bisect
+import hashlib
+from collections import defaultdict
+
+
+def _h(s: str) -> int:
+    return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "big")
+
+
+class HashRing:
+    def __init__(self, nodes: list, vnodes: int = 64, load_factor: float = 1.25):
+        self.vnodes = vnodes
+        self.load_factor = load_factor
+        self.loads = defaultdict(int)
+        self._nodes = set()
+        self._ring: list[tuple[int, str]] = []
+        for n in nodes:
+            self.add_node(n)
+
+    def add_node(self, node: str):
+        if node in self._nodes:
+            return
+        self._nodes.add(node)
+        for v in range(self.vnodes):
+            self._ring.append((_h(f"{node}#{v}"), node))
+        self._ring.sort()
+
+    def remove_node(self, node: str):
+        self._nodes.discard(node)
+        self._ring = [(h, n) for h, n in self._ring if n != node]
+        self.loads.pop(node, None)
+
+    @property
+    def nodes(self) -> list:
+        return sorted(self._nodes)
+
+    def _avg_load(self) -> float:
+        total = sum(self.loads.values())
+        return total / max(1, len(self._nodes))
+
+    def lookup(self, key: str, count: int = 1, bound_loads: bool = False,
+               allow_repeats: bool = True) -> list:
+        """First `count` distinct nodes clockwise from hash(key); with
+        bounded loads, overloaded nodes are skipped (next-fit). If fewer
+        than `count` nodes exist and allow_repeats, wrap around (degraded
+        stripe isolation beats unavailability)."""
+        if not self._ring:
+            raise RuntimeError("empty ring")
+        cap = self.load_factor * max(1.0, self._avg_load()) + 1
+        start = bisect.bisect_left(self._ring, (_h(key), ""))
+        out, seen = [], set()
+        i = start
+        n_ring = len(self._ring)
+        scanned = 0
+        while len(out) < count and scanned < 2 * n_ring:
+            _, node = self._ring[i % n_ring]
+            i += 1
+            scanned += 1
+            if node in seen or node not in self._nodes:
+                continue
+            if bound_loads and len(out) == 0 and self.loads[node] > cap \
+                    and len(self._nodes) > count:
+                continue
+            seen.add(node)
+            out.append(node)
+        if len(out) < count:
+            if allow_repeats and out:
+                while len(out) < count:
+                    out.append(out[len(out) % len(seen)])
+            else:
+                raise RuntimeError(f"only {len(out)} nodes for count={count}")
+        return out
+
+    def record_placement(self, node: str, weight: int = 1):
+        self.loads[node] += weight

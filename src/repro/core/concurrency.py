@@ -1,0 +1,47 @@
+"""Concurrency limiting (paper §4.2): the metastability guard.
+
+Cold starts are concurrency-limited; when in-flight work exceeds the
+limit, new starts are REJECTED (not queued) until in-flight ones complete,
+which bounds the demand amplification of an empty cache (Little's-law
+spiral)."""
+from __future__ import annotations
+
+import threading
+
+from repro.core.telemetry import COUNTERS
+
+
+class RejectingLimiter:
+    def __init__(self, max_inflight: int):
+        self.max_inflight = max_inflight
+        self._lock = threading.Lock()
+        self.inflight = 0
+        self.rejected = 0
+        self.admitted = 0
+
+    def try_acquire(self) -> bool:
+        with self._lock:
+            if self.inflight >= self.max_inflight:
+                self.rejected += 1
+                COUNTERS.inc("limiter.rejected")
+                return False
+            self.inflight += 1
+            self.admitted += 1
+            return True
+
+    def release(self):
+        with self._lock:
+            self.inflight -= 1
+
+
+class BlockingLimiter:
+    """For internal fetch paths: bounds concurrent origin reads."""
+
+    def __init__(self, max_inflight: int):
+        self._sem = threading.Semaphore(max_inflight)
+
+    def acquire(self):
+        self._sem.acquire()
+
+    def release(self):
+        self._sem.release()

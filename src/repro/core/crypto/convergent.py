@@ -1,0 +1,62 @@
+"""Convergent encryption (paper §3.1) with blast-radius salt (§3.3).
+
+key   = SHA256(salt ‖ plaintext)            (Farsite-style, salted)
+ct    = AES256-CTR(key, IV=0, plaintext)    (zero IV safe: one key ↔ one pt)
+name  = SHA256(ct)                          (content-addressed ciphertext)
+
+The salt varies with time / popularity / placement / GC root; identical
+plaintexts under the same salt deduplicate, different salts isolate blast
+radius. SHA256 (not a data-key AEAD) is used for integrity because AEADs
+don't provide collision resistance against attackers who know the key
+(paper footnote 2 / invisible-salamanders).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+from repro.core.crypto import aes
+
+
+def derive_key(plaintext: bytes, salt: bytes) -> bytes:
+    return hashlib.sha256(salt + plaintext).digest()
+
+
+def chunk_name(ciphertext: bytes) -> str:
+    return hashlib.sha256(ciphertext).hexdigest()
+
+
+@dataclass(frozen=True)
+class EncryptedChunk:
+    name: str
+    ciphertext: bytes
+    key: bytes          # goes into the manifest's (encrypted) key table
+    sha256: bytes       # of ciphertext: end-to-end integrity check
+
+
+def encrypt_chunk(plaintext: bytes, salt: bytes) -> EncryptedChunk:
+    key = derive_key(plaintext, salt)
+    ct = aes.ctr_encrypt(plaintext, key)
+    digest = hashlib.sha256(ct).digest()
+    return EncryptedChunk(name=digest.hex(), ciphertext=ct, key=key,
+                          sha256=digest)
+
+
+def decrypt_chunk(ciphertext: bytes, key: bytes, expect_sha256: bytes) -> bytes:
+    """Verify-then-decrypt; workers reject modified ciphertexts (§3.1)."""
+    if hashlib.sha256(ciphertext).digest() != expect_sha256:
+        raise IntegrityError("chunk ciphertext hash mismatch")
+    return aes.ctr_decrypt(ciphertext, key)
+
+
+class IntegrityError(Exception):
+    pass
+
+
+def make_salt(epoch: int, root_id: str, placement: str = "") -> bytes:
+    """Deduplication salt: rotates with epoch (time / popularity policy),
+    incorporates the active GC root (§3.4) and optionally the placement
+    domain (AZ / datacenter)."""
+    return hashlib.sha256(
+        b"repro-salt|%d|%s|%s" % (epoch, root_id.encode(), placement.encode())
+    ).digest()[:16]

@@ -1,0 +1,106 @@
+"""Generational root-based garbage collection (paper §3.4).
+
+Roots cycle active -> retired -> expired -> deleted. Retiring migrates
+still-referenced manifests (and every chunk they reference — readable from
+the manifest's *public* body, no keys needed) into the new active root.
+Expired roots serve reads but alarm and freeze deletions; deletion only
+proceeds for quiet expired roots. Multiple simultaneously-active roots are
+supported (blast-radius / staged-rollout, §3.4 last para).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core import manifest as manifest_mod
+from repro.core.telemetry import COUNTERS
+
+
+@dataclass
+class GCStats:
+    migrated_manifests: int = 0
+    migrated_chunks: int = 0
+    deleted_roots: list = field(default_factory=list)
+    alarms: list = field(default_factory=list)
+
+
+class GenerationalGC:
+    def __init__(self, store, first_root: str = "R1"):
+        self.store = store
+        self._counter = itertools.count(2)
+        self.active_roots = [first_root]
+        self.retired: list[str] = []
+        self.expired: list[str] = []
+        self.stats = GCStats()
+        store.create_root(first_root)
+        store.on_expired_read(self._alarm)
+
+    # ------------------------------------------------------------- alarms
+    def _alarm(self, root: str):
+        self.stats.alarms.append(root)
+        COUNTERS.inc("gc.expired_read_alarms")
+
+    # -------------------------------------------------------------- cycle
+    @property
+    def active(self) -> str:
+        return self.active_roots[-1]
+
+    def new_root(self) -> str:
+        """Create a new active root; the previous one is retired."""
+        nxt = f"R{next(self._counter)}"
+        self.store.create_root(nxt)
+        prev = self.active_roots.pop() if self.active_roots else None
+        self.active_roots.append(nxt)
+        if prev is not None:
+            self.store._set_state(prev, "retired")
+            self.retired.append(prev)
+        return nxt
+
+    def migrate(self, from_root: str, live_images: set):
+        """Copy still-referenced manifests + their chunks to the active root.
+
+        Reads only the PUBLIC manifest body (chunk names) — the GC never
+        holds tenant keys. Manifests keep their original salt/keys; their
+        chunks become readable in the new root under the same names.
+        """
+        to_root = self.active
+        for image_id in self.store.list_manifests(from_root):
+            if image_id not in live_images:
+                continue
+            blob = self.store.get_manifest(from_root, image_id)
+            pub = manifest_mod.read_public(blob)
+            for _idx, name, _sha in pub["chunks"]:
+                if name == manifest_mod.ZERO_CHUNK:
+                    continue
+                if not self.store.has_chunk(to_root, name):
+                    data = self.store.get_chunk(from_root, name)
+                    self.store.put_if_absent(to_root, name, data)
+                    self.stats.migrated_chunks += 1
+            self.store.put_manifest(to_root, image_id, blob)
+            self.stats.migrated_manifests += 1
+        COUNTERS.inc("gc.migrations")
+
+    def expire(self, root: str):
+        assert root in self.retired, f"{root} is not retired"
+        self.retired.remove(root)
+        self.store._set_state(root, "expired")
+        self.expired.append(root)
+
+    def delete_expired(self, root: str) -> bool:
+        """Delete an expired root — refused if any alarm fired (paper: any
+        expired-root access stops further deletion)."""
+        assert root in self.expired
+        if self.store.deletion_frozen:
+            COUNTERS.inc("gc.deletions_blocked")
+            return False
+        self.store.delete_root(root)
+        self.expired.remove(root)
+        self.stats.deleted_roots.append(root)
+        return True
+
+    def add_active_root(self) -> str:
+        """Additional simultaneously-active root (staged rollout)."""
+        nxt = f"R{next(self._counter)}"
+        self.store.create_root(nxt)
+        self.active_roots.append(nxt)
+        return nxt

@@ -1,0 +1,160 @@
+"""Image create / restore pipeline — the end-to-end paper data path.
+
+create_image:  pytree -> deterministic layout -> 512KiB chunks -> zero
+elision -> convergent encrypt (salted by epoch+root) -> PUT-if-absent into
+the active root -> sealed manifest. Returns dedup stats (the Fig 5 data).
+
+restore:       manifest -> TieredReader -> tensors on demand. The
+shard-aware variant fetches only the chunks covering this worker's
+parameter shards (the paper's *sparsity* property mapped to SPMD shards).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import layout as layout_mod
+from repro.core.blockdev import TieredReader
+from repro.core.crypto import convergent
+from repro.core.layout import (
+    CHUNK_SIZE,
+    ImageLayout,
+    ImageWriter,
+    build_layout,
+    canonical_paths,
+    ranges_to_chunks,
+    read_tensor,
+    shard_byte_ranges,
+)
+from repro.core.manifest import ZERO_CHUNK, ChunkRef, Manifest, open_manifest, seal
+from repro.core.telemetry import COUNTERS
+
+
+@dataclass
+class CreateStats:
+    image_id: str
+    total_chunks: int
+    zero_chunks: int
+    unique_chunks: int          # newly uploaded (not previously in store)
+    dedup_chunks: int           # present already (cross/self dedup)
+    bytes_total: int
+    bytes_uploaded: int
+
+    @property
+    def unique_fraction(self) -> float:
+        nz = self.total_chunks - self.zero_chunks
+        return self.unique_chunks / max(1, nz)
+
+
+def image_id_for(tree_or_bytes) -> str:
+    if isinstance(tree_or_bytes, bytes):
+        return hashlib.sha256(tree_or_bytes).hexdigest()[:32]
+    items = canonical_paths(tree_or_bytes)
+    h = hashlib.sha256()
+    for name, leaf in items:
+        arr = np.asarray(leaf)
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(arr).view(np.uint8).tobytes())
+    return h.hexdigest()[:32]
+
+
+def create_image(tree, *, tenant: str, tenant_key: bytes, store, root: str,
+                 salt_epoch: int = 0, image_id: str | None = None,
+                 chunk_size: int = CHUNK_SIZE) -> tuple[bytes, CreateStats]:
+    """Flatten, chunk, encrypt, upload. Returns (sealed manifest blob, stats)."""
+    lay = build_layout(tree, chunk_size)
+    writer = ImageWriter(lay)
+    for name, leaf in canonical_paths(tree):
+        writer.put(name, leaf)
+
+    salt = convergent.make_salt(salt_epoch, root)
+    image_id = image_id or image_id_for(tree)
+    refs, zero, unique, dedup, uploaded = [], 0, 0, 0, 0
+    for idx, chunk in writer.chunks():
+        if not np.any(np.frombuffer(chunk, np.uint8)):
+            refs.append(ChunkRef(idx, ZERO_CHUNK))
+            zero += 1
+            continue
+        enc = convergent.encrypt_chunk(chunk, salt)
+        was_new = store.put_if_absent(root, enc.name, enc.ciphertext)
+        if was_new:
+            unique += 1
+            uploaded += len(enc.ciphertext)
+        else:
+            dedup += 1
+        refs.append(ChunkRef(idx, enc.name, enc.key, enc.sha256))
+
+    m = Manifest(image_id=image_id, tenant=tenant, root_id=root, salt=salt,
+                 chunk_size=chunk_size, image_size=lay.image_size,
+                 layout_table=lay.to_table(), chunks=refs)
+    blob = seal(m, tenant_key)
+    store.put_manifest(root, image_id, blob)
+    stats = CreateStats(image_id, len(refs), zero, unique, dedup,
+                        lay.image_size, uploaded)
+    COUNTERS.inc("loader.images_created")
+    return blob, stats
+
+
+class ImageReader:
+    """Demand-loading view over a restored manifest."""
+
+    def __init__(self, manifest_blob: bytes, tenant_key: bytes, store,
+                 l1=None, l2=None, concurrency=None, root: str | None = None):
+        # `root` = the root the manifest was FETCHED from; after GC
+        # migration this differs from manifest.root_id (which names the
+        # root the image was created in and is baked into the salt).
+        self.manifest = open_manifest(manifest_blob, tenant_key)
+        self.layout = ImageLayout.from_table(self.manifest.layout_table,
+                                             self.manifest.chunk_size)
+        self.reader = TieredReader(self.manifest, store, root=root,
+                                   l1=l1, l2=l2, concurrency=concurrency)
+
+    def tensor(self, name: str) -> np.ndarray:
+        return read_tensor(self.layout, name, self.reader.read)
+
+    def tensor_names(self) -> list:
+        return list(self.layout.tensors)
+
+    def restore_tree(self, names=None) -> dict:
+        """Flat {path: array} for all (or selected) tensors."""
+        names = names if names is not None else self.tensor_names()
+        return {n: self.tensor(n) for n in names}
+
+    # ------------------------------------------------- shard-aware restore
+    def shard_chunks(self, shard_slices: dict) -> list:
+        """Chunk indices needed for {tensor_name: [(start, stop) per dim]}."""
+        ranges = []
+        for name, sl in shard_slices.items():
+            t = self.layout.tensors[name]
+            ranges.extend(shard_byte_ranges(t, sl))
+        return ranges_to_chunks(ranges, self.manifest.chunk_size)
+
+    def tensor_shard(self, name: str, dim_slices: list) -> np.ndarray:
+        """Fetch only the bytes of one rectangular shard."""
+        t = self.layout.tensors[name]
+        full_shape = t.shape
+        out_shape = tuple(e - s for s, e in dim_slices)
+        dt = np.dtype(t.dtype)
+        if not full_shape:
+            return np.frombuffer(self.reader.read(t.offset, t.nbytes), dt)[0]
+        ranges = shard_byte_ranges(t, dim_slices)
+        buf = bytearray()
+        for off, ln in ranges:
+            buf += self.reader.read(off, ln)
+        return np.frombuffer(bytes(buf), dt).reshape(out_shape)
+
+    def prefetch(self, chunk_indices: list):
+        for i in chunk_indices:
+            self.reader.fetch_chunk(i)
+
+
+def sharding_slices(shape: tuple, spec_sizes: list, coords: list) -> list:
+    """(start, stop) per dim for a device at `coords` in a sharding grid
+    of `spec_sizes` shards per dim."""
+    out = []
+    for dim, (n, c) in zip(shape, zip(spec_sizes, coords)):
+        step = dim // n
+        out.append((c * step, (c + 1) * step if c < n - 1 else dim))
+    return out

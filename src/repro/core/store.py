@@ -1,0 +1,137 @@
+"""Content-addressed origin store with generational roots (S3 stand-in).
+
+Chunks live under ``<dir>/roots/<root_id>/chunks/<aa>/<name>`` and
+manifests under ``.../manifests/<image_id>``. The only write primitive is
+PUT-if-absent (paper §3.1: flattening processes need no coordination).
+Reads on *expired* roots raise an alarm and freeze deletion (§3.4).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+
+from repro.core.telemetry import COUNTERS
+
+
+class ExpiredRootRead(Exception):
+    pass
+
+
+class ChunkStore:
+    def __init__(self, root_dir, fsync: bool = False):
+        self.dir = Path(root_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.fsync = fsync
+        self._lock = threading.Lock()
+        self._alarm_cbs = []
+        self.deletion_frozen = False
+
+    # ------------------------------------------------------------ helpers
+    def _chunk_path(self, root: str, name: str) -> Path:
+        return self.dir / "roots" / root / "chunks" / name[:2] / name
+
+    def _manifest_path(self, root: str, image_id: str) -> Path:
+        return self.dir / "roots" / root / "manifests" / image_id
+
+    def _state_path(self, root: str) -> Path:
+        return self.dir / "roots" / root / "STATE"
+
+    def _write(self, path: Path, data: bytes):
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp-%d" % threading.get_ident())
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    # -------------------------------------------------------------- roots
+    def create_root(self, root: str):
+        self._set_state(root, "active")
+
+    def _set_state(self, root: str, state: str):
+        self._write(self._state_path(root), json.dumps({"state": state}).encode())
+
+    def root_state(self, root: str) -> str:
+        p = self._state_path(root)
+        if not p.exists():
+            return "absent"
+        return json.loads(p.read_text())["state"]
+
+    def list_roots(self) -> list:
+        base = self.dir / "roots"
+        return sorted(p.name for p in base.iterdir()) if base.exists() else []
+
+    def on_expired_read(self, cb):
+        self._alarm_cbs.append(cb)
+
+    def _check_read(self, root: str):
+        if self.root_state(root) == "expired":
+            COUNTERS.inc("store.expired_root_reads")
+            self.deletion_frozen = True
+            for cb in self._alarm_cbs:
+                cb(root)
+
+    # -------------------------------------------------------------- chunks
+    def put_if_absent(self, root: str, name: str, data: bytes) -> bool:
+        """Returns True if the chunk was new (uploaded)."""
+        path = self._chunk_path(root, name)
+        if path.exists():
+            COUNTERS.inc("store.dedup_hits")
+            return False
+        self._write(path, data)
+        COUNTERS.inc("store.chunks_uploaded")
+        COUNTERS.add("store.bytes_uploaded", len(data))
+        return True
+
+    def has_chunk(self, root: str, name: str) -> bool:
+        return self._chunk_path(root, name).exists()
+
+    def get_chunk(self, root: str, name: str) -> bytes:
+        self._check_read(root)
+        COUNTERS.inc("store.chunk_gets")
+        return self._chunk_path(root, name).read_bytes()
+
+    def list_chunks(self, root: str) -> list:
+        base = self.dir / "roots" / root / "chunks"
+        if not base.exists():
+            return []
+        return sorted(p.name for sub in base.iterdir() for p in sub.iterdir())
+
+    def delete_chunk(self, root: str, name: str):
+        if self.deletion_frozen:
+            raise RuntimeError("deletions frozen by expired-root read alarm")
+        p = self._chunk_path(root, name)
+        if p.exists():
+            p.unlink()
+
+    # ----------------------------------------------------------- manifests
+    def put_manifest(self, root: str, image_id: str, blob: bytes):
+        self._write(self._manifest_path(root, image_id), blob)
+
+    def get_manifest(self, root: str, image_id: str) -> bytes:
+        self._check_read(root)
+        return self._manifest_path(root, image_id).read_bytes()
+
+    def has_manifest(self, root: str, image_id: str) -> bool:
+        return self._manifest_path(root, image_id).exists()
+
+    def list_manifests(self, root: str) -> list:
+        base = self.dir / "roots" / root / "manifests"
+        return sorted(p.name for p in base.iterdir()) if base.exists() else []
+
+    def delete_manifest(self, root: str, image_id: str):
+        if self.deletion_frozen:
+            raise RuntimeError("deletions frozen by expired-root read alarm")
+        p = self._manifest_path(root, image_id)
+        if p.exists():
+            p.unlink()
+
+    def delete_root(self, root: str):
+        if self.deletion_frozen:
+            raise RuntimeError("deletions frozen by expired-root read alarm")
+        import shutil
+        shutil.rmtree(self.dir / "roots" / root, ignore_errors=True)

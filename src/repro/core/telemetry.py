@@ -1,0 +1,68 @@
+"""Counters and latency recorders feeding the paper-figure benchmarks."""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+
+import numpy as np
+
+
+class Counters:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._c = defaultdict(float)
+
+    def inc(self, name: str, n: float = 1):
+        with self._lock:
+            self._c[name] += n
+
+    add = inc
+
+    def get(self, name: str) -> float:
+        return self._c.get(name, 0.0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._c)
+
+    def reset(self):
+        with self._lock:
+            self._c.clear()
+
+
+COUNTERS = Counters()
+
+
+class LatencyRecorder:
+    """Collects latency samples; emits percentiles and eCDFs (the paper
+    reports eCDFs because summary stats hide multi-modality, §5.1)."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.samples: list[float] = []
+
+    def record(self, seconds: float):
+        self.samples.append(seconds)
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return float("nan")
+        return float(np.percentile(np.array(self.samples), p))
+
+    def ecdf(self, points: int = 200):
+        xs = np.sort(np.array(self.samples))
+        ys = np.arange(1, len(xs) + 1) / len(xs)
+        if len(xs) > points:
+            idx = np.linspace(0, len(xs) - 1, points).astype(int)
+            xs, ys = xs[idx], ys[idx]
+        return xs.tolist(), ys.tolist()
+
+    def summary(self) -> dict:
+        if not self.samples:
+            return {"n": 0}
+        a = np.array(self.samples)
+        return {"n": len(a), "mean": float(a.mean()),
+                "p50": float(np.percentile(a, 50)),
+                "p99": float(np.percentile(a, 99)),
+                "p999": float(np.percentile(a, 99.9)),
+                "max": float(a.max())}

@@ -1,0 +1,3 @@
+from repro.kernels.gf256.gf256 import rs_encode_pallas, xtime_packed  # noqa: F401
+from repro.kernels.gf256.ops import rs_parity_fn  # noqa: F401
+from repro.kernels.gf256.ref import rs_encode_ref  # noqa: F401

@@ -1,0 +1,22 @@
+"""jit'd wrapper for RS-encode over byte stripes."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.gf256.gf256 import rs_encode_pallas
+from repro.kernels.parity.ops import pack_stripes
+
+
+def rs_parity_fn(matrix_parity_rows: np.ndarray, interpret: bool = True):
+    """Adapter producing (r, L) uint8 parity from (k, L) uint8 data using
+    the Pallas kernel; matrix rows are the bottom (n-k) of the encode
+    matrix from ``core.erasure.encode_matrix``."""
+    coeffs = tuple(tuple(int(c) for c in row) for row in matrix_parity_rows)
+
+    def fn(data_u8: np.ndarray) -> np.ndarray:
+        L = data_u8.shape[1]
+        packed = pack_stripes(np.asarray(data_u8, np.uint8))
+        out = np.asarray(rs_encode_pallas(packed, coeffs, interpret=interpret))
+        return out.view(np.int32).reshape(len(coeffs), -1, 1) \
+                  .view(np.uint8).reshape(len(coeffs), -1)[:, :L]
+    return fn

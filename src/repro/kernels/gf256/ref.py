@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the GF(256) RS-encode kernel (packed-lane math,
+identical formulation; the byte-level truth is core.erasure.gf_matmul)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def xtime_ref(x: jax.Array) -> jax.Array:
+    fe = jnp.int32(-16843010)
+    one = jnp.int32(0x01010101)
+    red = jnp.int32(0x1D1D1D1D)   # RS field 0x11D, matches core.erasure
+    doubled = jnp.bitwise_and(jax.lax.shift_left(x, 1), fe)
+    carry = jnp.bitwise_and(jax.lax.shift_right_logical(x, 7), one)
+    return jnp.bitwise_xor(doubled, jnp.bitwise_and(carry * 29, red))
+
+
+def gf_mul_const_ref(x: jax.Array, c: int) -> jax.Array:
+    acc = jnp.zeros_like(x)
+    term = x
+    while c:
+        if c & 1:
+            acc = jnp.bitwise_xor(acc, term)
+        c >>= 1
+        if c:
+            term = xtime_ref(term)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs",))
+def rs_encode_ref(data: jax.Array, coeffs: tuple) -> jax.Array:
+    rows = []
+    for row in coeffs:
+        acc = jnp.zeros_like(data[0])
+        for j, c in enumerate(row):
+            if c == 0:
+                continue
+            acc = jnp.bitwise_xor(acc, gf_mul_const_ref(data[j], int(c)))
+        rows.append(acc)
+    return jnp.stack(rows)

@@ -1,0 +1,3 @@
+from repro.kernels.parity.ops import parity_fn_for_erasure, parity_int32  # noqa: F401
+from repro.kernels.parity.parity import parity_pallas  # noqa: F401
+from repro.kernels.parity.ref import parity_ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""jit'd wrapper: bytes-level API used by ``repro.core.erasure`` when the
+kernel backend is selected."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.parity.parity import parity_pallas
+
+
+def pack_stripes(data_u8: np.ndarray) -> np.ndarray:
+    """(k, L) uint8 -> (k, ceil(L/4)) int32, zero-padded."""
+    k, L = data_u8.shape
+    pad = (-L) % 4
+    if pad:
+        data_u8 = np.pad(data_u8, ((0, 0), (0, pad)))
+    return data_u8.reshape(k, -1, 4).view(np.int32)[..., 0].reshape(k, -1)
+
+
+def parity_int32(data_i32, interpret: bool = True):
+    return parity_pallas(data_i32, interpret=interpret)
+
+
+def parity_fn_for_erasure(interpret: bool = True):
+    """Adapter matching ErasureCoder(parity_fn=...): (k, L) uint8 -> (L,) uint8."""
+    def fn(data_u8: np.ndarray) -> np.ndarray:
+        L = data_u8.shape[1]
+        packed = pack_stripes(np.asarray(data_u8, np.uint8))
+        out = np.asarray(parity_int32(packed, interpret=interpret))
+        return out.view(np.int32).reshape(-1, 1).view(np.uint8).reshape(-1)[:L]
+    return fn

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the parity kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def parity_ref(data: jax.Array) -> jax.Array:
+    """data: (k, W) int32 -> (W,) int32 XOR reduction."""
+    out = data[0]
+    for i in range(1, data.shape[0]):
+        out = jnp.bitwise_xor(out, data[i])
+    return out
+
+
+def parity_bytes_ref(stripes: list[bytes]) -> bytes:
+    """Byte-level oracle used by the erasure tests."""
+    import numpy as np
+    acc = np.frombuffer(stripes[0], np.uint8).copy()
+    for s in stripes[1:]:
+        acc ^= np.frombuffer(s, np.uint8)
+    return acc.tobytes()

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split  — the two lines above MUST run before jax locks device count
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable_shapes, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.modelflops import model_flops, param_counts
+from repro.launch.roofline import roofline_from_hlo
+from repro.launch.variants import VARIANTS, get_variant
+from repro.models.registry import build_model
+from repro.sharding.constrain import use_policy
+from repro.sharding.rules import specs_to_shardings
+from repro.train.optimizer import OptConfig, init_opt_state, opt_state_specs
+from repro.train.step import make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _bf16_shapes(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
+
+
+def _replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    """Lower one (arch x shape x mesh) cell. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    policy, flags, opt_over = get_variant(variant, cfg, shape)
+    model = build_model(cfg, flags)
+    opt_cfg = OptConfig(**opt_over)
+
+    param_shapes = model.param_shapes()
+    pspecs = model.param_specs()
+    batch_shapes = model.input_specs(shape)
+    batch_lspecs = model.input_logical_specs(shape)
+
+    with use_policy(mesh, policy):
+        param_sh = specs_to_shardings(pspecs, param_shapes, mesh, policy)
+        batch_sh = specs_to_shardings(batch_lspecs, batch_shapes, mesh, policy)
+
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), param_shapes)
+            ospecs = opt_state_specs(pspecs, opt_cfg)
+            opt_sh = specs_to_shardings(ospecs, opt_shapes, mesh, policy)
+            state_shapes = {"params": param_shapes, "opt": opt_shapes}
+            state_sh = {"params": param_sh, "opt": opt_sh}
+            step = make_train_step(model, opt_cfg)
+            metrics_sh = {"loss": _replicated(mesh), "grad_norm": _replicated(mesh)}
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metrics_sh),
+                donate_argnums=(0,),
+            ).lower(state_shapes, batch_shapes)
+            return lowered, dict(cfg=cfg, shape=shape, model=model)
+
+        sparams = _bf16_shapes(param_shapes)
+        sparam_sh = param_sh
+        B, S = shape.global_batch, shape.seq_len
+        enc_len = S if cfg.is_encdec else 0
+        if cfg.is_encdec:
+            state_shapes = jax.eval_shape(
+                lambda: model.init_decode_state(B, S, jnp.bfloat16, enc_len=S))
+        else:
+            state_shapes = jax.eval_shape(
+                lambda: model.init_decode_state(B, S, jnp.bfloat16))
+        sspec = model.decode_state_spec_tree()
+        state_sh = specs_to_shardings(sspec, state_shapes, mesh, policy)
+
+        if shape.kind == "prefill":
+            def prefill_step(params, batch, state):
+                return model.prefill(params, batch, state)
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(sparam_sh, batch_sh, state_sh),
+                out_shardings=(None, state_sh),
+                donate_argnums=(2,),
+            ).lower(sparams, batch_shapes, state_shapes)
+            return lowered, dict(cfg=cfg, shape=shape, model=model)
+
+        def serve_step(params, state, tokens, pos):
+            return model.decode_step(params, state, tokens, pos)
+        tok_sh = batch_sh["tokens"]
+        pos_sh = batch_sh["pos"]
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(sparam_sh, state_sh, tok_sh, pos_sh),
+            out_shardings=(None, state_sh),
+            donate_argnums=(1,),
+        ).lower(sparams, state_shapes,
+                batch_shapes["tokens"], batch_shapes["pos"])
+        return lowered, dict(cfg=cfg, shape=shape, model=model)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             variant: str = "baseline", verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    lowered, meta = build_cell(arch, shape_name, mesh, variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    mf = model_flops(meta["cfg"], meta["shape"], meta["model"].param_shapes())
+    roof = roofline_from_hlo(hlo, chips, mf)
+    counts = param_counts(meta["cfg"], meta["model"].param_shapes())
+
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "param_count": counts["total_with_embed"],
+        "param_active": counts["active"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "roofline": roof.to_dict(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} [{rec['mesh']}, {variant}] ==")
+        print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s  "
+              f"params {counts['total_with_embed']/1e9:.2f}B "
+              f"(active {counts['active']/1e9:.2f}B)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}")
+        r = rec["roofline"]
+        print(f"  roofline/chip: compute {r['compute_s']*1e3:.2f}ms  "
+              f"memory {r['memory_s']*1e3:.2f}ms  "
+              f"collective {r['collective_s']*1e3:.2f}ms  "
+              f"-> {r['dominant']}-bound, MFU {r['mfu']*100:.1f}%, "
+              f"useful {r['useful_fraction']*100:.1f}%")
+    return rec
+
+
+def save_record(rec: dict):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}_{rec['variant']}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(rec, indent=2))
+    return RESULTS_DIR / name
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    allowed = [s.name for s in applicable_shapes(cfg)]
+    if args.shape not in allowed:
+        print(f"SKIP: {args.arch} x {args.shape} not applicable "
+              f"(full-attention arch at 500k; see DESIGN.md)")
+        return
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   variant=args.variant)
+    if not args.no_save:
+        path = save_record(rec)
+        print(f"saved {path}")
+
+
+if __name__ == "__main__":
+    main()

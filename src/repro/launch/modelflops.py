@@ -1,0 +1,59 @@
+"""MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) bookkeeping.
+
+N excludes embedding/unembedding tables (standard convention). Expert
+tensors are detected structurally: leaves on a ``w_gate/w_up/w_down`` path
+whose shape carries the ``num_experts`` dim; they contribute scaled by
+(experts_per_token / num_experts). Decode/prefill use the 2·N forward-only
+factor; enc-dec decode counts decoder-side params only.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+_EXPERT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_counts(cfg: ModelConfig, param_shapes) -> dict:
+    total = expert = embed = decoder = 0
+    leaves = jax.tree_util.tree_flatten_with_path(param_shapes)[0]
+    for path, leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        p = _path_str(path)
+        top = p.split("/")[0]
+        if top in ("embed", "unembed"):
+            embed += n
+            continue
+        total += n
+        if cfg.num_experts and any(nm in p for nm in _EXPERT_NAMES) \
+                and cfg.num_experts in leaf.shape and "shared" not in p \
+                and "residual" not in p:
+            expert += n
+        if top in ("dec", "final_norm"):
+            decoder += n
+    active = total - expert
+    if cfg.num_experts:
+        active += expert * cfg.experts_per_token / cfg.num_experts
+    return {"total": total, "expert": expert, "active": active,
+            "embed": embed, "decoder": decoder,
+            "total_with_embed": total + embed}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, param_shapes) -> float:
+    c = param_counts(cfg, param_shapes)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * c["active"] * B * S
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return 2.0 * (c["total"] - c["decoder"]) * B * S
+        return 2.0 * c["active"] * B * S
+    # decode: one token per sequence
+    n = c["decoder"] if cfg.is_encdec else c["active"]
+    return 2.0 * n * B

@@ -1,0 +1,443 @@
+"""Roofline-term extraction from compiled HLO (CPU dry-run, TPU v5e targets).
+
+``jax`` / XLA's ``cost_analysis()`` counts while-loop bodies ONCE, which
+under-counts every scan-over-layers model by ~num_layers. This module does
+trip-count-aware accounting instead: it parses the optimized HLO text into
+computations, walks the control-flow call graph (while bodies multiplied by
+their ``known_trip_count`` annotation, nested loops multiply), and
+accumulates
+
+  * dot FLOPs           (2 * prod(result_shape) * prod(contracted dims))
+  * bytes accessed      (operand + result bytes of top-level instructions;
+                         fusion internals excluded, matching HBM traffic)
+  * collective bytes    (ring-model per-chip traffic for all-gather /
+                         all-reduce / reduce-scatter / all-to-all /
+                         collective-permute; async start/done deduped)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI (per-chip aggregate budget; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALL_ATTR_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\"\\:{\s]+n[\"\\:\s]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array literals in a type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op_line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # instr name -> result type
+    by_name: dict = field(default_factory=dict)   # instr name -> Instr
+    root: object = None
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("(" in stripped) and ("->" in stripped or stripped.startswith(("ENTRY", "%"))):
+            header = stripped
+            is_entry = header.startswith("ENTRY")
+            name = header.split()[1] if is_entry else header.split()[0]
+            name = name.lstrip("%").split("(")[0].rstrip(" ")
+            cur = Computation(name)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        iname, rest = m.groups()
+        # result type = leading type expression of rest
+        tmatch = re.match(r"^(\([^)]*\)|[\w\[\],{}\d]+)\s", rest)
+        rtype = tmatch.group(1) if tmatch else ""
+        ins = Instr(iname, rtype, rest)
+        cur.instrs.append(ins)
+        cur.symbols[iname] = rtype
+        cur.by_name[iname] = ins
+        if stripped.startswith("ROOT"):
+            cur.root = ins
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, entry
+
+
+def _op_kind(op_line: str) -> str:
+    # "bf16[..]{..} all-gather(...)" / "(f32[...], ...) while(...)"
+    # -> the op token right before its '(' argument list
+    m = re.search(r"[\}\])]\s*([a-z][a-z0-9\-]*)\(", op_line)
+    if m:
+        return m.group(1)
+    m = re.search(r"^\S+\s+([a-z][a-z0-9\-]*)\(", op_line)
+    return m.group(1) if m else ""
+
+
+def _group_size(op_line: str, default: int) -> int:
+    m = _GROUPS_RE.search(op_line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(op_line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _operand_names(op_line: str):
+    m = re.search(r"\(([^)]*)\)", op_line[op_line.index("("):] if "(" in op_line else "")
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip().startswith("%")]
+
+
+@dataclass
+class Costs:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0        # per-chip ring traffic
+    collective_detail: dict = field(default_factory=dict)
+
+
+def _param_charges(comp: Computation) -> list:
+    """Effective read size of each parameter of a fused computation.
+
+    If parameter i is consumed only by dynamic-slice/slice/gather ops, the
+    fusion reads just those windows: charge the max consumer result size.
+    Otherwise charge the full parameter size.
+    """
+    params = {}
+    order = []
+    for ins in comp.instrs:
+        if _op_kind(ins.op_line) == "parameter":
+            mnum = re.search(r"parameter\((\d+)\)", ins.op_line)
+            idx = int(mnum.group(1)) if mnum else len(order)
+            params[ins.name] = [idx, _shape_bytes(ins.result_type), None]
+            order.append(ins.name)
+    for ins in comp.instrs:
+        kind = _op_kind(ins.op_line)
+        for op in _operand_names(ins.op_line):
+            if op in params:
+                if kind in ("dynamic-slice", "slice", "gather"):
+                    rb = _shape_bytes(ins.result_type)
+                    cur = params[op][2]
+                    params[op][2] = rb if cur is None else max(cur, rb)
+                else:
+                    params[op][2] = params[op][1]  # full charge
+    # a parameter that is the *target* (operand 0) of a dynamic-update-slice
+    # is aliased in place: the fusion touches only the update window
+    for ins in comp.instrs:
+        if _op_kind(ins.op_line) == "dynamic-update-slice":
+            ops = _operand_names(ins.op_line)
+            if ops and ops[0] in params:
+                params[ops[0]][2] = 0
+    charges = [0] * (max((v[0] for v in params.values()), default=-1) + 1)
+    for idx, full, charge in params.values():
+        charges[idx] = full if charge is None else charge
+    return charges
+
+
+def _fusion_output_bytes(sub: Computation) -> float:
+    """Write bytes of a fused computation: a DUS root writes only its update
+    window (chase one bitcast/copy/convert/tuple level)."""
+    root = sub.root
+    if root is None:
+        return 0.0
+    seen = 0
+    ins = root
+    while ins is not None and seen < 4:
+        kind = _op_kind(ins.op_line)
+        if kind == "dynamic-update-slice":
+            ops = _operand_names(ins.op_line)
+            upd = _shape_bytes(sub.symbols.get(ops[1], "")) if len(ops) > 1 else 0
+            return 2.0 * upd
+        if kind in ("bitcast", "copy", "convert", "reshape", "transpose"):
+            ops = _operand_names(ins.op_line)
+            ins = sub.by_name.get(ops[0]) if ops else None
+            seen += 1
+            continue
+        if kind == "tuple":
+            total = 0.0
+            for op in _operand_names(ins.op_line):
+                t = sub.by_name.get(op)
+                if t is not None and _op_kind(t.op_line) == "dynamic-update-slice":
+                    tops = _operand_names(t.op_line)
+                    total += 2.0 * _shape_bytes(sub.symbols.get(tops[1], "")) \
+                        if len(tops) > 1 else 0.0
+                else:
+                    total += _shape_bytes(t.result_type) if t is not None else 0.0
+            return total
+        break
+    return _shape_bytes(root.result_type)
+
+
+def _instr_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    kind = _op_kind(ins.op_line)
+    result = _shape_bytes(ins.result_type)
+    ops = _operand_names(ins.op_line)
+    if kind in ("dynamic-slice", "slice"):
+        return 2.0 * result  # window read + write; indices negligible
+    if kind == "dynamic-update-slice":
+        upd = _shape_bytes(comp.symbols.get(ops[1], "")) if len(ops) > 1 else 0
+        return 2.0 * upd  # only the window is touched (operand aliases result)
+    if kind == "gather":
+        idxb = _shape_bytes(comp.symbols.get(ops[1], "")) if len(ops) > 1 else 0
+        return 2.0 * result + idxb
+    if kind == "scatter":
+        upd = sum(_shape_bytes(comp.symbols.get(o, "")) for o in ops[1:])
+        return result + 2.0 * upd
+    if kind == "fusion":
+        sub = None
+        for attr in _CALL_ATTR_RE.finditer(ins.op_line):
+            sub = comps.get(attr.group(1))
+        total = _fusion_output_bytes(sub) if sub else result
+        charges = _param_charges(sub) if sub else []
+        for i, op in enumerate(ops):
+            if i < len(charges):
+                total += charges[i]
+            else:
+                total += _shape_bytes(comp.symbols.get(op, ""))
+        return total
+    total = result
+    for op in ops:
+        total += _shape_bytes(comp.symbols.get(op, ""))
+    return total
+
+
+def _dot_flops_of(comp: Computation, comps: dict, memo: dict) -> float:
+    """dot FLOPs of a computation including nested fusion/call bodies
+    (CPU XLA wraps dots inside kLoop/kOutput fusions)."""
+    key = ("dots", comp.name)
+    if key in memo:
+        return memo[key]
+    memo[key] = 0.0  # cycle guard
+    total = 0.0
+    for ins in comp.instrs:
+        kind = _op_kind(ins.op_line)
+        if kind == "dot":
+            _, rdims = _first_shape(ins.result_type)
+            ops = _operand_names(ins.op_line)
+            lhs_type = comp.symbols.get(ops[0], "") if ops else ""
+            _, ldims = _first_shape(lhs_type)
+            mcon = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.op_line)
+            contract = 1
+            if mcon and ldims:
+                for d in mcon.group(1).split(","):
+                    if d:
+                        contract *= ldims[int(d)]
+            rn = 1
+            for d in rdims or []:
+                rn *= d
+            total += 2.0 * rn * contract
+        elif kind in ("fusion", "map"):
+            # fusion bodies only — control-flow (while/call/conditional)
+            # recursion is handled by analyze_computation with trip counts
+            for attr in _CALL_ATTR_RE.finditer(ins.op_line):
+                sub = comps.get(attr.group(1))
+                if sub:
+                    total += _dot_flops_of(sub, comps, memo)
+    memo[key] = total
+    return total
+
+
+def analyze_computation(comp: Computation, comps: dict, total_devices: int,
+                        memo: dict) -> Costs:
+    if comp.name in memo:
+        return memo[comp.name]
+    c = Costs()
+    c.dot_flops = _dot_flops_of(comp, comps, memo)
+    for ins in comp.instrs:
+        kind = _op_kind(ins.op_line)
+        base = kind.replace("-start", "")
+        if base in COLLECTIVES and not kind.endswith("-done"):
+            n = _group_size(ins.op_line, total_devices)
+            if n > 1:
+                rbytes = _shape_bytes(ins.result_type)
+                if kind.startswith("all-gather"):
+                    # -start results can be (operand, result) tuples: take result
+                    sizes = sorted(
+                        _shape_bytes(s.group(0)) for s in
+                        re.finditer(r"\w+\[[0-9,]*\]", ins.result_type))
+                    full = sizes[-1] if sizes else rbytes
+                    moved = full * (n - 1) / n
+                elif kind.startswith("all-reduce"):
+                    moved = 2 * rbytes * (n - 1) / n
+                elif kind.startswith("reduce-scatter"):
+                    moved = rbytes * (n - 1)  # result is the scattered shard
+                elif kind.startswith("all-to-all"):
+                    moved = rbytes * (n - 1) / n
+                else:  # collective-permute
+                    moved = rbytes
+                c.collective_bytes += moved
+                c.collective_detail[base] = c.collective_detail.get(base, 0.0) + moved
+        # bytes: result + *effective* operand bytes. A dynamic-slice (or a
+        # fusion that only dynamic-slices a parameter — the scan-over-layers
+        # weight fetch) touches only the slice, not the stacked operand;
+        # charging the full operand would overcount by num_layers.
+        if kind in ("fusion", "dot", "copy", "transpose", "reshape", "broadcast",
+                    "reduce", "scatter", "gather", "dynamic-slice",
+                    "dynamic-update-slice", "concatenate", "pad", "slice",
+                    "convert", "select-and-scatter", "sort", "iota", "rng",
+                    "reduce-window", "cholesky", "triangular-solve", "convolution") \
+                or base in COLLECTIVES:
+            c.bytes_accessed += _instr_bytes(ins, comp, comps)
+        # control flow recursion
+        if kind == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.op_line)
+            if mt:
+                trip = int(mt.group(1))
+            for attr in _CALL_ATTR_RE.finditer(ins.op_line):
+                sub = comps.get(attr.group(1))
+                if sub:
+                    sc = analyze_computation(sub, comps, total_devices, memo)
+                    c.dot_flops += trip * sc.dot_flops
+                    c.bytes_accessed += trip * sc.bytes_accessed
+                    c.collective_bytes += trip * sc.collective_bytes
+                    for k, v in sc.collective_detail.items():
+                        c.collective_detail[k] = c.collective_detail.get(k, 0.0) + trip * v
+        elif kind in ("call", "conditional", "async-start"):
+            names = [a.group(1) for a in _CALL_ATTR_RE.finditer(ins.op_line)]
+            mb = _BRANCHES_RE.search(ins.op_line)
+            if mb:
+                names += [n.strip().lstrip("%") for n in mb.group(1).split(",")]
+            for nm in names:
+                sub = comps.get(nm)
+                if sub:
+                    sc = analyze_computation(sub, comps, total_devices, memo)
+                    c.dot_flops += sc.dot_flops
+                    c.bytes_accessed += sc.bytes_accessed
+                    c.collective_bytes += sc.collective_bytes
+                    for k, v in sc.collective_detail.items():
+                        c.collective_detail[k] = c.collective_detail.get(k, 0.0) + v
+    memo[comp.name] = c
+    return c
+
+
+def analyze_hlo(text: str, total_devices: int) -> Costs:
+    comps, entry = parse_hlo(text)
+    return analyze_computation(comps[entry], comps, total_devices, {})
+
+
+@dataclass
+class Roofline:
+    """Per-step roofline terms, in seconds. All quantities are PER CHIP:
+    the compiled module is the per-device SPMD program."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collective_detail: dict
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-chip model share vs compiled)."""
+        per_chip_model = self.model_flops / self.chips
+        return per_chip_model / self.flops if self.flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-projected step time."""
+        per_chip_model = self.model_flops / self.chips
+        t = self.step_time_s
+        return per_chip_model / (t * PEAK_FLOPS) if t else 0.0
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "flops": self.flops,
+            "bytes": self.bytes, "collective_bytes": self.collective_bytes,
+            "collective_detail": self.collective_detail,
+            "model_flops": self.model_flops, "chips": self.chips,
+            "dominant": self.dominant, "mfu": self.mfu,
+            "useful_fraction": self.useful_fraction,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def roofline_from_hlo(text: str, chips: int, model_flops: float) -> Roofline:
+    """The compiled module is per-device, so costs are already per chip."""
+    c = analyze_hlo(text, chips)
+    return Roofline(
+        compute_s=c.dot_flops / PEAK_FLOPS,
+        memory_s=c.bytes_accessed / HBM_BW,
+        collective_s=c.collective_bytes / ICI_BW,
+        flops=c.dot_flops,
+        bytes=c.bytes_accessed,
+        collective_bytes=c.collective_bytes,
+        collective_detail=dict(c.collective_detail),
+        model_flops=model_flops,
+        chips=chips,
+    )

@@ -1,0 +1,2 @@
+from repro.models.lm import DecoderLM, RunFlags, layout  # noqa: F401
+from repro.models.registry import build_model  # noqa: F401

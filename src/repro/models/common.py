@@ -1,0 +1,153 @@
+"""Shared model machinery: params-with-logical-specs, norms, RoPE, losses.
+
+Parameter pytrees are plain nested dicts of ``jnp.ndarray``. Every init
+function returns ``(params, specs)`` where ``specs`` mirrors the structure
+with tuples of *logical axis names* (see ``repro.sharding.rules`` for the
+logical->mesh translation). Keeping specs structural (not attached to a
+module system) is what lets the chunk-store layout map a ``NamedSharding``
+directly to byte ranges.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any   # nested dict of arrays
+Specs = Any    # nested dict of tuples of logical axis names (or None)
+
+
+def stable_fold(key: jax.Array, name: str) -> jax.Array:
+    """Deterministic per-name RNG split (stable across processes/runs)."""
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "big")
+    return jax.random.fold_in(key, h)
+
+
+def dense_init(key, name, in_dim, out_dim, in_axis, out_axis, scale=None):
+    """He/Glorot-ish normal init for a (in_dim, out_dim) matrix."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    w = jax.random.normal(stable_fold(key, name), (in_dim, out_dim), jnp.float32) * scale
+    return w, (in_axis, out_axis)
+
+
+def norm_init(dim, kind: str):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}, \
+               {"scale": (None,), "bias": (None,)}
+    return {"scale": jnp.ones((dim,), jnp.float32)}, {"scale": (None,)}
+
+
+def apply_norm(p, x, kind: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- positional
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]             # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(length: int, dim: int) -> jnp.ndarray:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def sin_pos(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Sinusoidal embedding computed in-graph (no big HLO literal).
+
+    positions: (...,) -> (..., dim)."""
+    i = jnp.arange(dim // 2, dtype=jnp.float32)
+    angle = positions[..., None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------- embeddings
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embed_init(key, name, vocab: int, d_model: int):
+    v = pad_vocab(vocab)
+    w = jax.random.normal(stable_fold(key, name), (v, d_model), jnp.float32) * 0.02
+    return w, ("vocab", "fsdp")
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(table.astype(dtype), tokens, axis=0)
+
+
+# ---------------------------------------------------------------- losses
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Mean token cross-entropy; logits may be vocab-padded (masked)."""
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] != vocab:
+        pad = logits.shape[-1] - vocab
+        mask = jnp.concatenate([jnp.zeros((vocab,)), jnp.full((pad,), -1e9)])
+        logits = logits + mask
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_softmax_xent(x: jnp.ndarray, embed_t: jnp.ndarray, labels: jnp.ndarray,
+                         vocab: int, chunk: int = 512) -> jnp.ndarray:
+    """Loss without materializing full (B,S,V) logits: scan over seq chunks.
+
+    x: (B, S, D) final hidden; embed_t: (V, D) output embedding.
+    Peak memory drops by S/chunk. Beyond-paper memory optimization used by
+    the hillclimbed configs.
+    """
+    B, S, D = x.shape
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, D).swapaxes(0, 1)          # (n, B, c, D)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)        # (n, B, c)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = xc.astype(jnp.float32) @ embed_t.T.astype(jnp.float32)
+        if logits.shape[-1] != vocab:
+            pad = logits.shape[-1] - vocab
+            mask = jnp.concatenate([jnp.zeros((vocab,)), jnp.full((pad,), -1e9)])
+            logits = logits + mask
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ls))
+    return total / (B * S)
+
+
+def count_params(params: Params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, S, d_model). Encoder = bidirectional attention blocks;
+decoder = self-attention (cached) + cross-attention + FFN. ``prefill``
+runs the encoder and builds the decoder's cross-KV; ``decode_step`` is the
+cached decoder step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.blocks import (
+    SubDef,
+    cross_kv,
+    decode_state_specs,
+    sublayer_apply,
+    sublayer_decode_state,
+    sublayer_init,
+)
+from repro.models.common import (
+    apply_norm,
+    embed_init,
+    embed_lookup,
+    norm_init,
+    sin_pos,
+    softmax_xent,
+    stable_fold,
+)
+from repro.models.lm import RunFlags
+from repro.sharding.constrain import logical_constraint
+
+ENC_SUB = SubDef("attn", "dense", causal=False)
+DEC_SUBS = [SubDef("attn", "none"), SubDef("cross_attn", "dense")]
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, flags: RunFlags = RunFlags()):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.flags = flags
+        self._specs = None
+
+    # ------------------------------------------------------------- params
+    def _build(self, key):
+        cfg = self.cfg
+        params, specs = {}, {}
+        params["embed"], specs["embed"] = embed_init(key, "embed", cfg.vocab_size, cfg.d_model)
+        params["unembed"], specs["unembed"] = embed_init(key, "unembed", cfg.vocab_size, cfg.d_model)
+
+        def enc_one(k):
+            return {"s0": sublayer_init(k, "enc.s0", cfg, ENC_SUB)[0]}
+
+        def dec_one(k):
+            return {f"s{j}": sublayer_init(k, f"dec.s{j}", cfg, sd)[0]
+                    for j, sd in enumerate(DEC_SUBS)}
+
+        ekeys = jax.random.split(stable_fold(key, "enc"), cfg.encoder_layers)
+        dkeys = jax.random.split(stable_fold(key, "dec"), cfg.num_layers)
+        params["enc"] = jax.vmap(enc_one)(ekeys)
+        params["dec"] = jax.vmap(dec_one)(dkeys)
+
+        def lift(tree):
+            return jax.tree.map(
+                lambda ax: (None,) + tuple(ax), tree,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(a, (str, type(None))) for a in x))
+
+        specs["enc"] = {"s0": lift(sublayer_init(ekeys[0], "enc.s0", cfg, ENC_SUB)[1])}
+        specs["dec"] = {f"s{j}": lift(sublayer_init(dkeys[0], f"dec.s{j}", cfg, sd)[1])
+                        for j, sd in enumerate(DEC_SUBS)}
+        params["enc_norm"], specs["enc_norm"] = norm_init(cfg.d_model, cfg.norm_type)
+        params["final_norm"], specs["final_norm"] = norm_init(cfg.d_model, cfg.norm_type)
+        self._specs = specs
+        return params
+
+    def init(self, key):
+        return self._build(key)
+
+    def param_specs(self):
+        if self._specs is None:
+            jax.eval_shape(self._build, jax.random.key(0))
+        return self._specs
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ------------------------------------------------------------ encoder
+    def _maybe_remat(self, body):
+        if self.flags.remat == "full":
+            return jax.checkpoint(body)
+        if self.flags.remat == "dots":
+            return jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return body
+
+    def encode(self, params, frames, dtype):
+        cfg = self.cfg
+        S = frames.shape[1]
+        x = frames.astype(dtype) + sin_pos(jnp.arange(S), cfg.d_model).astype(dtype)
+        x = logical_constraint(x, ("batch", "seq", None))
+
+        def body(h, p_l):
+            h, _ = sublayer_apply(p_l["s0"], h, cfg, ENC_SUB, dtype, mode="encode",
+                                  positions=jnp.arange(S))
+            return h, None
+
+        x, _ = jax.lax.scan(self._maybe_remat(body), x, params["enc"])
+        return apply_norm(params["enc_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+    # -------------------------------------------------------------- train
+    def loss(self, params, batch):
+        cfg, flags = self.cfg, self.flags
+        dtype = jnp.dtype(flags.dtype)
+        enc_out = self.encode(params, batch["frames"], dtype)
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        x = embed_lookup(params["embed"], tokens, dtype)
+        x = x + sin_pos(jnp.arange(S), cfg.d_model).astype(dtype)
+
+        def body(h, p_l):
+            h, _ = sublayer_apply(p_l["s0"], h, cfg, DEC_SUBS[0], dtype,
+                                  mode="train", positions=jnp.arange(S))
+            h, _ = sublayer_apply(p_l["s1"], h, cfg, DEC_SUBS[1], dtype,
+                                  mode="train", enc_out=enc_out)
+            return h, None
+
+        x, _ = jax.lax.scan(self._maybe_remat(body), x, params["dec"])
+        x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        logits = x @ params["unembed"].T.astype(dtype)
+        return softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+    # -------------------------------------------------------------- serve
+    def init_decode_state(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                          enc_len: int = 0):
+        cfg = self.cfg
+        enc_len = enc_len or cfg.encoder_seq
+        self_kv = sublayer_decode_state(cfg, DEC_SUBS[0], batch, max_len, dtype)
+        cross = sublayer_decode_state(cfg, DEC_SUBS[1], batch, max_len, dtype,
+                                      enc_len=enc_len)
+        L = cfg.num_layers
+        stack = lambda t: jax.tree.map(lambda a: jnp.zeros((L,) + a.shape, a.dtype), t)
+        return {"s0": stack(self_kv), "s1": stack(cross)}
+
+    def decode_state_spec_tree(self):
+        lift = lambda t: jax.tree.map(
+            lambda ax: (None,) + tuple(ax), t,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(a, (str, type(None))) for a in x))
+        return {"s0": lift(decode_state_specs(DEC_SUBS[0])),
+                "s1": lift(decode_state_specs(DEC_SUBS[1]))}
+
+    def prefill(self, params, batch, state):
+        """Encoder pass + cross-KV build. Returns (enc summary logits, state)."""
+        cfg, flags = self.cfg, self.flags
+        dtype = jnp.dtype(flags.dtype)
+        enc_out = self.encode(params, batch["frames"], dtype)
+
+        def body(_, p_l):
+            return None, cross_kv(p_l["s1"]["mixer"], enc_out, cfg, dtype)
+
+        _, cross = jax.lax.scan(body, None, params["dec"])
+        new_state = {"s0": state["s0"], "s1": cross}
+        # first-token logits from BOS-free summary: mean-pooled encoder state
+        logits = (jnp.mean(enc_out, axis=1) @ params["unembed"].T.astype(dtype))
+        return logits, new_state
+
+    def decode_step(self, params, state, tokens, pos):
+        cfg, flags = self.cfg, self.flags
+        dtype = jnp.dtype(flags.dtype)
+        x = embed_lookup(params["embed"], tokens, dtype)
+        x = x + sin_pos(pos, cfg.d_model).astype(dtype)
+
+        def body(h, xs):
+            p_l, st_l = xs
+            h, ns0 = sublayer_apply(p_l["s0"], h, cfg, DEC_SUBS[0], dtype,
+                                    mode="decode", pos=pos, state=st_l["s0"])
+            h, ns1 = sublayer_apply(p_l["s1"], h, cfg, DEC_SUBS[1], dtype,
+                                    mode="decode", pos=pos, state=st_l["s1"])
+            return h, {"s0": ns0, "s1": ns1}
+
+        x, new_state = jax.lax.scan(body, x, (params["dec"], state))
+        x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        logits = x @ params["unembed"].T.astype(dtype)
+        return logits, new_state
+
+    # -------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sds, i32 = jax.ShapeDtypeStruct, jnp.int32
+        if shape.kind == "train":
+            return {"frames": sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"frames": sds((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": sds((B,), i32), "pos": sds((B,), i32)}
+
+    def input_logical_specs(self, shape: ShapeConfig):
+        if shape.kind == "train":
+            return {"frames": ("batch", None, None), "tokens": ("batch", None),
+                    "labels": ("batch", None)}
+        if shape.kind == "prefill":
+            return {"frames": ("batch", None, None)}
+        return {"tokens": ("batch",), "pos": ("batch",)}

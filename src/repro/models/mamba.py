@@ -1,0 +1,147 @@
+"""Mamba (S6) block: selective state-space mixer.
+
+Training runs a *chunked* time scan — outer ``lax.scan`` over chunks whose
+bodies are ``jax.checkpoint``-ed inner scans — so the backward pass stores
+only chunk-boundary states (O(S/chunk · B·d_inner·d_state)) instead of
+every step. Decode keeps O(1) state: a (d_conv-1)-deep conv window plus the
+(d_inner, d_state) SSM state — this is what makes the ``long_500k`` cell
+feasible for jamba.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, stable_fold
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, (cfg.d_model + 15) // 16)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def mamba_init(key, prefix: str, cfg: ModelConfig):
+    D, Din, N, R = cfg.d_model, d_inner(cfg), cfg.d_state, _dt_rank(cfg)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = dense_init(key, f"{prefix}.in_proj", D, 2 * Din, "fsdp", "tp")
+    p["conv_w"] = jax.random.normal(
+        stable_fold(key, f"{prefix}.conv_w"), (cfg.d_conv, Din), jnp.float32) * 0.2
+    s["conv_w"] = (None, "tp")
+    p["conv_b"] = jnp.zeros((Din,), jnp.float32)
+    s["conv_b"] = ("tp",)
+    p["x_proj"], s["x_proj"] = dense_init(key, f"{prefix}.x_proj", Din, R + 2 * N, "tp", None)
+    p["dt_proj"], s["dt_proj"] = dense_init(key, f"{prefix}.dt_proj", R, Din, None, "tp")
+    p["dt_bias"] = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(stable_fold(key, f"{prefix}.dt"), (Din,),
+                                   minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))))
+    s["dt_bias"] = ("tp",)
+    # A: negative real, S4D-real init
+    p["A_log"] = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Din, N)))
+    s["A_log"] = ("tp", None)
+    p["D"] = jnp.ones((Din,), jnp.float32)
+    s["D"] = ("tp",)
+    p["out_proj"], s["out_proj"] = dense_init(key, f"{prefix}.out_proj", Din, D, "tp", "fsdp")
+    return p, s
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig, dtype):
+    """Shared pre-scan computation. x: (B, S, Din) post-conv/silu."""
+    N, R = cfg.d_state, _dt_rank(cfg)
+    proj = x @ p["x_proj"].astype(dtype)                      # (B,S,R+2N)
+    dt, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(dtype)
+                         + p["dt_bias"].astype(dtype))        # (B,S,Din)
+    A = -jnp.exp(p["A_log"])                                  # (Din,N) f32
+    return dt.astype(jnp.float32), Bmat.astype(jnp.float32), Cmat.astype(jnp.float32), A
+
+
+def _scan_chunked(step_fn, state0, xs, seq_axis_len: int, chunk: int):
+    """Outer scan over chunks, checkpointed inner scan over steps."""
+    nchunk = max(1, seq_axis_len // chunk)
+    while seq_axis_len % nchunk:
+        nchunk -= 1
+    csize = seq_axis_len // nchunk
+
+    def reshape(a):  # (B, S, ...) -> (nchunk, csize, B, ...)
+        moved = jnp.moveaxis(a, 1, 0)                         # (S, B, ...)
+        return moved.reshape((nchunk, csize) + moved.shape[1:])
+
+    xs_c = jax.tree.map(reshape, xs)
+
+    @jax.checkpoint
+    def chunk_body(state, chunk_xs):
+        return jax.lax.scan(step_fn, state, chunk_xs)
+
+    state, ys = jax.lax.scan(chunk_body, state0, xs_c)
+    ys = ys.reshape((nchunk * csize,) + ys.shape[2:])          # (S, B, ...)
+    return state, jnp.moveaxis(ys, 0, 1)
+
+
+def mamba_apply(p, x: jnp.ndarray, cfg: ModelConfig, dtype, chunk: int = 64,
+                return_state: bool = False):
+    """Training/prefill path. x: (B, S, D) -> (B, S, D) [, final decode state]."""
+    B, S, D = x.shape
+    Din, N = d_inner(cfg), cfg.d_state
+    xz = x @ p["in_proj"].astype(dtype)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                      # (B,S,Din)
+
+    # causal depthwise conv over seq
+    pad = jnp.pad(xi_raw, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * p["conv_w"][i].astype(dtype)
+               for i in range(cfg.d_conv))
+    xi = jax.nn.silu(conv + p["conv_b"].astype(dtype))
+
+    dt, Bm, Cm, A = _ssm_inputs(p, xi, cfg, dtype)
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp                              # (B,Din),(B,N),(B,N),(B,Din)
+        dA = jnp.exp(dt_t[..., None] * A)                      # (B,Din,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Din, N), jnp.float32)
+    h_final, ys = _scan_chunked(step, h0,
+                                (dt, Bm, Cm, xi.astype(jnp.float32)), S, chunk)
+    y = ys.astype(dtype) + xi * p["D"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dtype)
+    if return_state:
+        state = {"conv": xi_raw[:, S - (cfg.d_conv - 1):, :].astype(dtype)
+                 if cfg.d_conv > 1 else xi_raw[:, :0, :].astype(dtype),
+                 "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba_decode_state(cfg: ModelConfig, batch: int, dtype):
+    Din = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, Din), dtype),
+        "ssm": jnp.zeros((batch, Din, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x: jnp.ndarray, state, cfg: ModelConfig, dtype):
+    """One token. x: (B, D) -> (B, D); state updated in place (functionally)."""
+    Din = d_inner(cfg)
+    xz = x @ p["in_proj"].astype(dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)                          # (B,Din)
+
+    window = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)  # (B,d_conv,Din)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(dtype), p["conv_w"].astype(dtype))
+    xi = jax.nn.silu(conv + p["conv_b"].astype(dtype))
+
+    dt, Bm, Cm, A = _ssm_inputs(p, xi[:, None, :], cfg, dtype)
+    dt_t, B_t, C_t = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    dA = jnp.exp(dt_t[..., None] * A)
+    h = dA * state["ssm"] + dt_t[..., None] * B_t[:, None, :] * xi.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, C_t).astype(dtype) + xi * p["D"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    new_state = {"conv": window[:, 1:, :], "ssm": h}
+    return y @ p["out_proj"].astype(dtype), new_state

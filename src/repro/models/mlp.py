@@ -1,0 +1,29 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GeLU (starcoder2/whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def mlp_init(key, prefix: str, d_model: int, d_ff: int, kind: str):
+    p, s = {}, {}
+    if kind == "swiglu":
+        p["w_gate"], s["w_gate"] = dense_init(key, f"{prefix}.w_gate", d_model, d_ff, "fsdp", "tp")
+        p["w_up"], s["w_up"] = dense_init(key, f"{prefix}.w_up", d_model, d_ff, "fsdp", "tp")
+        p["w_down"], s["w_down"] = dense_init(key, f"{prefix}.w_down", d_ff, d_model, "tp", "fsdp")
+    else:
+        p["w_up"], s["w_up"] = dense_init(key, f"{prefix}.w_up", d_model, d_ff, "fsdp", "tp")
+        p["w_down"], s["w_down"] = dense_init(key, f"{prefix}.w_down", d_ff, d_model, "tp", "fsdp")
+    return p, s
+
+
+def mlp_apply(p, x: jnp.ndarray, kind: str, dtype) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = x @ p["w_gate"].astype(dtype)
+        u = x @ p["w_up"].astype(dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dtype))
+    return h @ p["w_down"].astype(dtype)

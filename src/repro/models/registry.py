@@ -1,0 +1,16 @@
+"""``build_model(cfg, flags)`` -> model object with the uniform interface:
+
+init / param_specs / param_shapes / loss / prefill / decode_step /
+init_decode_state / decode_state_spec_tree / input_specs / input_logical_specs
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.lm import DecoderLM, RunFlags
+
+
+def build_model(cfg: ModelConfig, flags: RunFlags = RunFlags()):
+    if cfg.is_encdec:
+        return EncDecModel(cfg, flags)
+    return DecoderLM(cfg, flags)

@@ -1,0 +1,204 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, pre-up-projection)
+and sLSTM (scalar memory with true recurrence, post-up-projection).
+
+Both train via the chunked-checkpointed time scan from ``mamba._scan_chunked``
+and keep O(1) decode state, so xlstm-350m runs the ``long_500k`` cell.
+Exponential gating is stabilized with the running max trick (m state) from
+the paper, in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, stable_fold
+from repro.models.mamba import _scan_chunked
+
+
+def m_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+# --------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, prefix: str, cfg: ModelConfig):
+    D, Din, H = cfg.d_model, m_inner(cfg), cfg.num_heads
+    p, s = {}, {}
+    p["up"], s["up"] = dense_init(key, f"{prefix}.up", D, 2 * Din, "fsdp", "tp")
+    for nm in ("wq", "wk", "wv"):
+        p[nm], s[nm] = dense_init(key, f"{prefix}.{nm}", Din, Din, "tp", "heads")
+    p["w_if"], s["w_if"] = dense_init(key, f"{prefix}.w_if", Din, 2 * H, "tp", None)
+    p["b_if"] = jnp.concatenate([jnp.zeros((H,)), jnp.full((H,), 3.0)]).astype(jnp.float32)
+    s["b_if"] = (None,)
+    p["down"], s["down"] = dense_init(key, f"{prefix}.down", Din, D, "tp", "fsdp")
+    p["norm_scale"] = jnp.ones((Din,), jnp.float32)
+    s["norm_scale"] = ("tp",)
+    return p, s
+
+
+def _mlstm_qkvif(p, xi, H, dtype):
+    Din = xi.shape[-1]
+    hd = Din // H
+    q = (xi @ p["wq"].astype(dtype)).reshape(xi.shape[:-1] + (H, hd))
+    k = (xi @ p["wk"].astype(dtype)).reshape(xi.shape[:-1] + (H, hd)) / jnp.sqrt(hd).astype(dtype)
+    v = (xi @ p["wv"].astype(dtype)).reshape(xi.shape[:-1] + (H, hd))
+    gif = (xi @ p["w_if"].astype(dtype)).astype(jnp.float32) + p["b_if"]
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)                  # (..., H)
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry                                            # (B,H,dk,dv),(B,H,dk),(B,H)
+    q, k, v, i_pre, f_pre = inp                                # (B,H,hd)...,(B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n = f_g[..., None] * n + i_g[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m))
+    return (C, n, m_new), num / den[..., None]
+
+
+def mlstm_apply(p, x: jnp.ndarray, cfg: ModelConfig, dtype, chunk: int = 256,
+                return_state: bool = False):
+    B, S, D = x.shape
+    H, Din = cfg.num_heads, m_inner(cfg)
+    hd = Din // H
+    up = x @ p["up"].astype(dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, xi, H, dtype)      # (B,S,H,hd)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    final, ys = _scan_chunked(_mlstm_step, (C0, n0, m0),
+                              (q, k, v, i_pre, f_pre), S, chunk)  # (B,S,H,hd)
+    # group-norm-ish per-head RMS
+    ms = jnp.mean(jnp.square(ys), axis=-1, keepdims=True)
+    h = (ys * jax.lax.rsqrt(ms + 1e-6)).reshape(B, S, Din).astype(dtype)
+    h = h * p["norm_scale"].astype(dtype)
+    h = h * jax.nn.silu(z)
+    out = h @ p["down"].astype(dtype)
+    if return_state:
+        C, n, m = final
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_decode_state(cfg: ModelConfig, batch: int):
+    H, Din = cfg.num_heads, m_inner(cfg)
+    hd = Din // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x: jnp.ndarray, state, cfg: ModelConfig, dtype):
+    B, D = x.shape
+    H, Din = cfg.num_heads, m_inner(cfg)
+    up = x @ p["up"].astype(dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, xi, H, dtype)      # (B,H,hd)
+    (C, n, m), y = _mlstm_step((state["C"], state["n"], state["m"]),
+                               (q, k, v, i_pre, f_pre))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    h = (y * jax.lax.rsqrt(ms + 1e-6)).reshape(B, Din).astype(dtype)
+    h = h * p["norm_scale"].astype(dtype) * jax.nn.silu(z)
+    return h @ p["down"].astype(dtype), {"C": C, "n": n, "m": m}
+
+
+# --------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, prefix: str, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.num_heads
+    p, s = {}, {}
+    p["conv_w"] = jax.random.normal(
+        stable_fold(key, f"{prefix}.conv_w"), (cfg.d_conv, D), jnp.float32) * 0.2
+    s["conv_w"] = (None, "tp")
+    # input weights for i,f,z,o
+    p["w_x"], s["w_x"] = dense_init(key, f"{prefix}.w_x", D, 4 * D, "fsdp", "tp")
+    # block-diagonal (per-head) recurrent weights
+    hd = D // H
+    p["r"] = jax.random.normal(stable_fold(key, f"{prefix}.r"),
+                               (4, H, hd, hd), jnp.float32) / jnp.sqrt(hd)
+    s["r"] = (None, "heads", None, None)
+    p["b"] = jnp.concatenate(
+        [jnp.zeros((D,)), jnp.full((D,), 3.0), jnp.zeros((2 * D,))]).astype(jnp.float32)
+    s["b"] = (None,)
+    ff = cfg.d_ff if cfg.d_ff else ((4 * D // 3 + 127) // 128) * 128
+    p["ff_up"], s["ff_up"] = dense_init(key, f"{prefix}.ff_up", D, ff, "fsdp", "tp")
+    p["ff_down"], s["ff_down"] = dense_init(key, f"{prefix}.ff_down", ff, D, "tp", "fsdp")
+    return p, s
+
+
+def _slstm_step_fn(p, H):
+    def step(carry, x_t):
+        h, c, n, m = carry                                     # (B,D) f32 each
+        B, D = h.shape
+        hd = D // H
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhk,ghkl->gbhl", hh, p["r"]).reshape(4, B, D)
+        x_t = jnp.moveaxis(x_t, 1, 0)                          # (B,4,D) -> (4,B,D)
+        pre = x_t + rec + p["b"].reshape(4, 1, D)
+        i_pre, f_pre, z_pre, o_pre = pre
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c = f_g * c + i_g * jnp.tanh(z_pre)
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+    return step
+
+
+def slstm_apply(p, x: jnp.ndarray, cfg: ModelConfig, dtype, chunk: int = 256,
+                return_state: bool = False):
+    B, S, D = x.shape
+    pad = jnp.pad(x, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * p["conv_w"][i].astype(dtype)
+               for i in range(cfg.d_conv))
+    xg = jax.nn.silu(conv)
+    x4 = (xg @ p["w_x"].astype(dtype)).astype(jnp.float32).reshape(B, S, 4, D)
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    step = _slstm_step_fn(p, cfg.num_heads)
+    final, hs = _scan_chunked(step, (zeros, zeros, zeros, zeros),
+                              x4, S, chunk)                    # ys (B,S,D)
+    h = hs.astype(dtype)
+    ff = jax.nn.gelu(h @ p["ff_up"].astype(dtype)) @ p["ff_down"].astype(dtype)
+    if return_state:
+        hf, cf, nf, mf = final
+        state = {"h": hf, "c": cf, "n": nf, "m": mf,
+                 "conv": x[:, S - (cfg.d_conv - 1):, :].astype(dtype)}
+        return ff, state
+    return ff
+
+
+def slstm_decode_state(cfg: ModelConfig, batch: int, dtype):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z,
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, D), dtype)}
+
+
+def slstm_decode(p, x: jnp.ndarray, state, cfg: ModelConfig, dtype):
+    B, D = x.shape
+    window = jnp.concatenate([state["conv"], x[:, None, :]], axis=1)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(dtype), p["conv_w"].astype(dtype))
+    xg = jax.nn.silu(conv)
+    x4 = (xg @ p["w_x"].astype(dtype)).astype(jnp.float32).reshape(B, 4, D)
+    step = _slstm_step_fn(p, cfg.num_heads)
+    (h, c, n, m), _ = step((state["h"], state["c"], state["n"], state["m"]), x4)
+    out = h.astype(dtype)
+    ff = jax.nn.gelu(out @ p["ff_up"].astype(dtype)) @ p["ff_down"].astype(dtype)
+    new_state = {"h": h, "c": c, "n": n, "m": m, "conv": window[:, 1:, :]}
+    return ff, new_state

@@ -1,0 +1,6 @@
+from repro.sharding.constrain import (  # noqa: F401
+    active_policy,
+    logical_constraint,
+    use_policy,
+)
+from repro.sharding.rules import ShardingPolicy, specs_to_shardings  # noqa: F401

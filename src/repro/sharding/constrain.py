@@ -1,0 +1,41 @@
+"""In-graph sharding constraints from logical axis names.
+
+``use_policy(mesh, policy)`` installs a (mesh, policy) pair; model code
+calls ``logical_constraint(x, ("batch", None, "tp"))`` which becomes a
+``with_sharding_constraint`` when a policy is active and a no-op otherwise
+(CPU smoke tests run without any mesh).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+
+from repro.sharding.rules import ShardingPolicy, logical_to_pspec
+
+_state = threading.local()
+
+
+def active_policy():
+    return getattr(_state, "active", None)
+
+
+@contextmanager
+def use_policy(mesh, policy: ShardingPolicy):
+    prev = getattr(_state, "active", None)
+    _state.active = (mesh, policy)
+    try:
+        yield
+    finally:
+        _state.active = prev
+
+
+def logical_constraint(x, axes):
+    act = active_policy()
+    if act is None:
+        return x
+    mesh, policy = act
+    pspec = logical_to_pspec(tuple(axes), x.shape, mesh, policy)
+    sharding = jax.sharding.NamedSharding(mesh, pspec)
+    return jax.lax.with_sharding_constraint(x, sharding)

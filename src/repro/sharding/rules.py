@@ -1,0 +1,85 @@
+"""Logical-axis -> mesh-axis translation.
+
+Model code annotates arrays with *logical* axis names ("batch", "fsdp",
+"tp", "expert", ...). A ``ShardingPolicy`` decides which mesh axes each
+logical name maps to. Baseline policy = Megatron-style TP on `model` +
+ZeRO/FSDP on `data` + pure DP across `pod`; the §Perf variants swap these
+mappings without touching model code.
+
+Non-divisible dims (e.g. smollm's 15 heads on a 16-way axis, whisper's
+kv_heads=8) are handled by *dropping* the constraint for that dim — the
+translation is shape-aware.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Which mesh axes each logical axis name maps to."""
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+    name: str = "baseline"
+
+    def with_rules(self, name: str = "", **updates) -> "ShardingPolicy":
+        r = dict(self.rules)
+        r.update(updates)
+        return ShardingPolicy(rules=r, name=name or self.name)
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "tp_inner": (),            # second shard dim inside an expert
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "seq": (),                 # sequence parallelism (opt-in)
+    "kv_seq": (),              # KV-cache sequence sharding (opt-in)
+}
+
+
+def _mesh_axes(mesh: Mesh, logical: str | None, policy: ShardingPolicy):
+    if logical is None:
+        return ()
+    axes = policy.rules.get(logical, ())
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def logical_to_pspec(axes, shape, mesh: Mesh, policy: ShardingPolicy) -> P:
+    """Translate a tuple of logical names to a PartitionSpec, dropping any
+    mapping that does not evenly divide its dim, and never assigning one
+    mesh axis to two dims (first dim wins — e.g. xlstm's (tp, heads))."""
+    out = []
+    used: set = set()
+    for dim, logical in zip(shape, axes):
+        mapped = _mesh_axes(mesh, logical, policy)
+        mapped = tuple(a for a in mapped if a not in used)
+        size = 1
+        for a in mapped:
+            size *= mesh.shape[a]
+        if mapped and size > 1 and dim % size == 0:
+            out.append(mapped if len(mapped) > 1 else mapped[0])
+            used.update(mapped)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def specs_to_shardings(spec_tree, shape_tree, mesh: Mesh, policy: ShardingPolicy):
+    """Build a NamedSharding pytree for (logical spec tree, ShapeDtype tree)."""
+    def one(axes, sds):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        pspec = logical_to_pspec(tuple(axes), sds.shape, mesh, policy)
+        return NamedSharding(mesh, pspec)
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: x is None or (isinstance(x, tuple)
+                                                        and all(isinstance(a, (str, type(None))) for a in x)))

@@ -1,0 +1,144 @@
+"""Chunk-store-backed checkpointing: the paper's system AS the training
+framework's checkpoint layer.
+
+Every checkpoint is a flattened image in the content-addressed store:
+  * unchanged tensors (frozen layers, embeddings in late training, the
+    base model under LoRA-style fine-tuning) dedup to ZERO new chunks —
+    incremental checkpointing falls out of content addressing;
+  * restore is demand-paged and shard-aware: a recovering worker fetches
+    only its shard's byte ranges, through the L1/L2 cache tiers — the
+    paper's cold-start path, repurposed as elastic-recovery fast-start;
+  * uploads run on a background thread (async checkpointing): the train
+    loop snapshots to host memory and continues.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.loader import ImageReader, create_image
+from repro.core.telemetry import COUNTERS
+
+
+def state_to_tree(state) -> dict:
+    """Device pytree -> flat {path: numpy} dict (host snapshot)."""
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    out = {}
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[p] = np.asarray(leaf)
+    return out
+
+
+def tree_from_flat(template, flat: dict):
+    """Rebuild the pytree structure of `template` from {path: numpy}."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = flat[p]
+        leaves.append(np.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclass
+class CheckpointRecord:
+    step: int
+    image_id: str
+    root: str
+    stats: dict = field(default_factory=dict)
+
+
+class CheckpointManager:
+    def __init__(self, store, gc, *, tenant: str, tenant_key: bytes,
+                 run_name: str = "run", async_upload: bool = True,
+                 chunk_size: int = 512 * 1024, l1=None, l2=None):
+        self.store = store
+        self.gc = gc
+        self.tenant = tenant
+        self.key = tenant_key
+        self.run = run_name
+        self.async_upload = async_upload
+        self.chunk_size = chunk_size
+        self.l1, self.l2 = l1, l2
+        self.records: list[CheckpointRecord] = []
+        self._pending: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, state) -> None:
+        """Snapshot to host, then upload (async by default)."""
+        host_tree = state_to_tree(state)     # synchronous device->host copy
+        if self._pending is not None:
+            self._pending.join()             # backpressure: one in flight
+        t = threading.Thread(target=self._upload, args=(step, host_tree),
+                             daemon=True)
+        t.start()
+        self._pending = t
+        if not self.async_upload:
+            t.join()
+
+    def _upload(self, step: int, host_tree: dict):
+        t0 = time.time()
+        image_id = f"{self.run}-step{step:08d}"
+        blob, stats = create_image(
+            host_tree, tenant=self.tenant, tenant_key=self.key,
+            store=self.store, root=self.gc.active, image_id=image_id,
+            chunk_size=self.chunk_size)
+        rec = CheckpointRecord(step, image_id, self.gc.active, {
+            "unique_chunks": stats.unique_chunks,
+            "dedup_chunks": stats.dedup_chunks,
+            "zero_chunks": stats.zero_chunks,
+            "bytes_uploaded": stats.bytes_uploaded,
+            "bytes_total": stats.bytes_total,
+            "seconds": time.time() - t0,
+        })
+        with self._lock:
+            self.records.append(rec)
+        COUNTERS.inc("ckpt.saves")
+        # tiny metadata file for discovery
+        self.store.put_manifest(self.gc.active, f"{image_id}.meta",
+                                json.dumps(rec.stats).encode())
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+
+    # ------------------------------------------------------------- restore
+    def latest(self) -> CheckpointRecord | None:
+        self.wait()
+        with self._lock:
+            return self.records[-1] if self.records else None
+
+    def reader(self, rec: CheckpointRecord) -> ImageReader:
+        blob = self.store.get_manifest(rec.root, rec.image_id)
+        return ImageReader(blob, self.key, self.store, l1=self.l1, l2=self.l2,
+                           root=rec.root)
+
+    def restore(self, rec: CheckpointRecord, template):
+        """Full restore into the structure of `template`."""
+        r = self.reader(rec)
+        flat = r.restore_tree()
+        return tree_from_flat(template, flat)
+
+    def restore_tensors(self, rec: CheckpointRecord, names: list) -> dict:
+        """Demand restore of selected tensors only (shard-aware recovery)."""
+        r = self.reader(rec)
+        return {n: r.tensor(n) for n in names}
+
+    def discover(self, run: str | None = None) -> list:
+        """Rebuild records from the store (cross-process restart path)."""
+        run = run or self.run
+        out = []
+        for root in self.store.list_roots():
+            for mid in self.store.list_manifests(root):
+                if mid.startswith(run + "-step") and not mid.endswith(".meta"):
+                    step = int(mid.split("step")[-1])
+                    out.append(CheckpointRecord(step, mid, root))
+        out.sort(key=lambda r: r.step)
+        return out

@@ -1,0 +1,128 @@
+"""AdamW in raw JAX, with optional block-quantized 8-bit moments.
+
+The 8-bit option (bnb-style per-block absmax int8) is a beyond-paper
+distributed-optimization feature: it is what lets kimi-k2's optimizer state
+fit the 512-chip multi-pod memory budget (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments: str = "float32"     # float32 | bfloat16 | int8
+    block: int = 256             # int8 quantization block
+
+
+# ----------------------------------------------------------- int8 moments
+
+_SHARD_PAD = 512  # nblocks padded so the quantized state shards on any mesh
+
+
+def _q8(x: jnp.ndarray, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    rowpad = (-blocks.shape[0]) % _SHARD_PAD
+    if rowpad:
+        blocks = jnp.pad(blocks, ((0, rowpad), (0, 0)))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(s, shape):
+    blocks = s["q"].astype(jnp.float32) * s["scale"]
+    flat = blocks.reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def _encode_moment(x, cfg: OptConfig):
+    if cfg.moments == "int8":
+        return _q8(x, cfg.block)
+    if cfg.moments == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def _decode_moment(s, cfg: OptConfig, shape=None):
+    if cfg.moments == "int8":
+        return _dq8(s, shape)
+    return s.astype(jnp.float32) if s.dtype != jnp.float32 else s
+
+
+# ----------------------------------------------------------------- adamw
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros = jax.tree.map(lambda p: _encode_moment(jnp.zeros_like(p, jnp.float32), cfg), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: _encode_moment(jnp.zeros_like(p, jnp.float32), cfg), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_specs, cfg: OptConfig):
+    """Moment shardings mirror the params (plus scale arrays for int8)."""
+    def lift(ax):
+        if cfg.moments == "int8":
+            # quantized layout is flattened, nblocks padded to _SHARD_PAD:
+            # shard the block rows FSDP-style
+            return {"q": ("fsdp", None), "scale": ("fsdp", None)}
+        return ax
+    is_spec = lambda x: x is None or (isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x))
+    moments = jax.tree.map(lift, param_specs, is_leaf=is_spec)
+    return {"m": moments, "v": moments, "step": None}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptConfig):
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12)) \
+        if cfg.grad_clip else 1.0
+
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = _decode_moment(m_s, cfg, p.shape)
+        v = _decode_moment(v_s, cfg, p.shape)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return new_p, _encode_moment(m, cfg), _encode_moment(v, cfg)
+
+    is_moment = lambda x: isinstance(x, dict) and "q" in x
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"]) if cfg.moments == "int8" \
+        else jax.tree.leaves(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"]) if cfg.moments == "int8" \
+        else jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gn

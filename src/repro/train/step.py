@@ -1,0 +1,42 @@
+"""train_step / serve_step factories used by the launcher, dry-run, and the
+CPU examples alike."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def init_train_state(model, key, opt_cfg: OptConfig):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def make_train_step(model, opt_cfg: OptConfig):
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+        new_params, new_opt, gn = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gn}
+        return {"params": new_params, "opt": new_opt}, metrics
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, state):
+        return model.prefill(params, batch, state)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, state, tokens, pos):
+        return model.decode_step(params, state, tokens, pos)
+    return decode_step
+
+
+def cast_params(params, dtype=jnp.bfloat16):
+    """Serving-time weight cast (floating leaves only)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)

@@ -1,0 +1,155 @@
+"""TieredReader / COW device / loader end-to-end properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blockdev import PAGE, CowBlockDevice
+from repro.core.cache.distributed import DistributedCache
+from repro.core.cache.local import LocalCache
+from repro.core.gc import GenerationalGC
+from repro.core.loader import ImageReader, create_image
+from repro.core.store import ChunkStore
+
+
+@pytest.fixture
+def env(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(7)
+    tree = {
+        "w_f32": rng.standard_normal((128, 96)).astype(np.float32),
+        "w_bf16_as_u16": rng.integers(0, 65535, (64, 64)).astype(np.uint16),
+        "w_i8": rng.integers(-128, 127, (300,)).astype(np.int8),
+        "scalar": np.float32(3.25),
+        "zeros": np.zeros((2048,), np.float32),
+    }
+    key = b"T" * 32
+    blob, stats = create_image(tree, tenant="t", tenant_key=key, store=store,
+                               root=gc.active, chunk_size=4096)
+    return store, gc, tree, key, blob, stats
+
+
+def test_restore_all_dtypes(env):
+    store, gc, tree, key, blob, stats = env
+    r = ImageReader(blob, key, store)
+    for name, want in tree.items():
+        got = r.tensor(name)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), name
+        assert got.dtype == np.asarray(want).dtype
+
+
+def test_reads_arbitrary_offsets(env):
+    store, gc, tree, key, blob, stats = env
+    r = ImageReader(blob, key, store)
+    # image truth
+    from repro.core.layout import ImageWriter, build_layout
+    lay = build_layout(tree, 4096)
+    wr = ImageWriter(lay)
+    for k, v in tree.items():
+        wr.put(k, v)
+    truth = wr.buf.tobytes()
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        off = int(rng.integers(0, len(truth) - 1))
+        ln = int(rng.integers(1, min(10000, len(truth) - off)))
+        assert r.reader.read(off, ln) == truth[off:off + ln]
+
+
+def test_tiered_fetch_order(env):
+    store, gc, tree, key, blob, stats = env
+    from repro.core.telemetry import COUNTERS
+    COUNTERS.reset()
+    l1 = LocalCache(64 << 20, name="l1x")
+    l2 = DistributedCache(num_nodes=6, seed=0)
+    r = ImageReader(blob, key, store, l1=l1, l2=l2)
+    r.restore_tree()
+    first_origin = COUNTERS.get("read.origin_fetches")
+    assert first_origin > 0
+    # second reader on same worker: all L1
+    r2 = ImageReader(blob, key, store, l1=l1, l2=l2)
+    r2.restore_tree()
+    assert COUNTERS.get("read.origin_fetches") == first_origin
+    # third reader, different worker (no L1): all L2, still no origin
+    r3 = ImageReader(blob, key, store, l1=LocalCache(64 << 20, name="l1y"), l2=l2)
+    r3.restore_tree()
+    assert COUNTERS.get("read.origin_fetches") == first_origin
+
+
+def test_corrupt_chunk_rejected(env):
+    store, gc, tree, key, blob, stats = env
+    from repro.core.crypto.convergent import IntegrityError
+    from repro.core.manifest import ZERO_CHUNK, open_manifest
+    m = open_manifest(blob, key)
+    name = next(c.name for c in m.chunks if c.name != ZERO_CHUNK)
+    path = store._chunk_path("R1", name)
+    raw = bytearray(path.read_bytes())
+    raw[0] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    r = ImageReader(blob, key, store)
+    with pytest.raises(IntegrityError):
+        r.restore_tree()
+
+
+class TestCow:
+    def _dev(self, env):
+        store, gc, tree, key, blob, stats = env
+        r = ImageReader(blob, key, store)
+        return CowBlockDevice(r.reader), r
+
+    def test_read_through(self, env):
+        dev, r = self._dev(env)
+        assert dev.read(0, 100) == r.reader.read(0, 100)
+
+    @given(off=st.integers(0, 5000), ln=st.integers(1, 3000),
+           seed=st.integers(0, 100))
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[__import__("hypothesis").HealthCheck
+                                     .function_scoped_fixture])
+    def test_write_read_property(self, env, off, ln, seed):
+        # fresh device per example (fixture reuse is fine: base is immutable)
+        dev, r = self._dev(env)
+        payload = np.random.default_rng(seed).integers(
+            0, 256, ln, dtype=np.uint8).tobytes()
+        before = dev.read(0, off + ln + 64)
+        dev.write(off, payload)
+        after = dev.read(0, off + ln + 64)
+        assert after[:off] == before[:off]
+        assert after[off:off + ln] == payload
+        assert after[off + ln:] == before[off + ln:]
+
+    def test_page_bitmap_granularity(self, env):
+        dev, _ = self._dev(env)
+        dev.write(10, b"z")                     # sub-page write
+        assert dev.bitmap[0] and dev.dirty_bytes == PAGE
+        dev.write(PAGE * 3, b"q" * PAGE)        # exact page
+        assert dev.bitmap[3] and dev.dirty_bytes == 2 * PAGE
+
+    def test_base_immutable(self, env):
+        store, gc, tree, key, blob, stats = env
+        dev, r = self._dev(env)
+        dev.write(0, b"X" * 64)
+        r2 = ImageReader(blob, key, store)      # fresh replica view
+        assert r2.reader.read(0, 64) != b"X" * 64
+
+
+def test_dedup_across_finetunes(env):
+    store, gc, tree, key, blob, stats = env
+    ft = dict(tree)
+    ft["w_i8"] = (np.asarray(tree["w_i8"]) + 1).astype(np.int8)  # small delta
+    blob2, s2 = create_image(ft, tenant="other", tenant_key=b"O" * 32,
+                             store=store, root=gc.active, chunk_size=4096)
+    assert s2.dedup_chunks > 0
+    assert s2.unique_chunks < s2.total_chunks - s2.zero_chunks
+    # cross-tenant restore of the fine-tune with its own key works
+    r = ImageReader(blob2, b"O" * 32, store)
+    assert np.array_equal(r.tensor("w_i8"), ft["w_i8"])
+
+
+def test_shard_restore_matches(env):
+    store, gc, tree, key, blob, stats = env
+    r = ImageReader(blob, key, store)
+    w = np.asarray(tree["w_f32"])
+    got = r.tensor_shard("w_f32", [(32, 64), (0, 96)])
+    assert np.array_equal(got, w[32:64])
+    got2 = r.tensor_shard("w_f32", [(0, 128), (48, 96)])
+    assert np.array_equal(got2, w[:, 48:96])

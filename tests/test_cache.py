@@ -1,0 +1,129 @@
+"""Cache tier behavior: LRU-k scan resistance, hashring balance,
+constant-work erasure fetch, failure resilience."""
+import numpy as np
+
+from repro.core.cache.distributed import DistributedCache
+from repro.core.cache.hashring import HashRing
+from repro.core.cache.local import LocalCache
+from repro.core.cache.lru_k import LRUK
+
+
+class TestLRUK:
+    def test_basic(self):
+        c = LRUK(100, k=2)
+        c.put("a", b"x" * 40)
+        c.put("b", b"y" * 40)
+        assert c.get("a") == b"x" * 40
+        c.put("c", b"z" * 40)      # evicts something
+        assert c.used <= 100
+
+    def test_scan_resistance(self):
+        """Hot keys (accessed >=k times) survive a one-shot scan; plain LRU
+        would evict them (paper §4.3 cron-spike scenario)."""
+        c = LRUK(10 * 64, k=2)
+        for key in ("hot1", "hot2"):
+            c.put(key, b"h" * 64)
+            for _ in range(5):
+                c.get(key)
+        for i in range(20):        # scan of one-shot keys
+            c.put(f"scan{i}", b"s" * 64)
+        assert c.get("hot1") is not None
+        assert c.get("hot2") is not None
+
+    def test_lru_fallback_evicts_scan_keys_first(self):
+        c = LRUK(5 * 64, k=2)
+        c.put("hot", b"h" * 64)
+        c.get("hot")
+        for i in range(10):
+            c.put(f"one{i}", b"s" * 64)
+        # all evicted keys were one-shot
+        assert "hot" in c
+
+
+class TestHashRing:
+    def test_balance(self):
+        ring = HashRing([f"n{i}" for i in range(10)], vnodes=128)
+        counts = {}
+        for i in range(20000):
+            n = ring.lookup(f"chunk-{i}")[0]
+            counts[n] = counts.get(n, 0) + 1
+        load = np.array(list(counts.values()))
+        assert load.max() / load.mean() < 1.6   # decent spread
+
+    def test_distinct_nodes_for_stripes(self):
+        ring = HashRing([f"n{i}" for i in range(8)])
+        nodes = ring.lookup("key", count=5)
+        assert len(set(nodes)) == 5
+
+    def test_minimal_disruption(self):
+        ring = HashRing([f"n{i}" for i in range(10)], vnodes=128)
+        before = {f"c{i}": ring.lookup(f"c{i}")[0] for i in range(2000)}
+        ring.remove_node("n3")
+        moved = sum(1 for k, v in before.items()
+                    if v != "n3" and ring.lookup(k)[0] != v)
+        assert moved / 2000 < 0.05              # consistent hashing property
+
+    def test_bounded_loads(self):
+        ring = HashRing([f"n{i}" for i in range(6)], load_factor=1.2)
+        for i in range(600):
+            n = ring.lookup(f"k{i}", bound_loads=True)[0]
+            ring.record_placement(n)
+        loads = np.array([ring.loads[n] for n in ring.nodes])
+        assert loads.max() <= 1.2 * loads.mean() + 2
+
+
+class TestDistributedCache:
+    def test_put_get_roundtrip(self):
+        l2 = DistributedCache(num_nodes=8, seed=1)
+        data = np.random.default_rng(0).integers(0, 256, 524288,
+                                                 dtype=np.uint8).tobytes()
+        l2.put_chunk("deadbeef", data)
+        lat, got = l2.get_chunk("deadbeef", len(data))
+        assert got == data and lat > 0
+
+    def test_single_node_failure_is_invisible(self):
+        """4-of-5: any one node down -> still a hit, same work (paper §4.1)."""
+        l2 = DistributedCache(num_nodes=8, seed=2)
+        data = b"D" * 100_000
+        l2.put_chunk("cafe", data)
+        victim = l2.ring.lookup("cafe", count=5)[2]
+        l2.fail_node(victim)
+        lat, got = l2.get_chunk("cafe", len(data))
+        assert got == data
+
+    def test_two_failures_miss(self):
+        l2 = DistributedCache(num_nodes=8, seed=3)
+        data = b"D" * 10_000
+        l2.put_chunk("beef", data)
+        for v in l2.ring.lookup("beef", count=5)[:2]:
+            l2.fail_node(v)
+        _, got = l2.get_chunk("beef", len(data))
+        assert got is None
+
+    def test_erasure_beats_kofk_tail(self):
+        """Fig 9: p99.9 of 4-of-5 reads below p99.9 of 4-of-4 reads."""
+        l2 = DistributedCache(num_nodes=10, seed=4)
+        data = b"x" * 65536
+        for i in range(50):
+            l2.put_chunk(f"c{i}", data)
+        ec, kk = [], []
+        for trial in range(40):
+            for i in range(50):
+                lat, _ = l2.get_chunk(f"c{i}", len(data))
+                ec.append(lat)
+                lat2, _ = l2.get_chunk_unreplicated(f"c{i}", len(data))
+                kk.append(lat2)
+        assert np.percentile(ec, 99.9) < np.percentile(kk, 99.9)
+        assert np.percentile(ec, 99) <= np.percentile(kk, 99)
+
+
+def test_local_cache_hit_rate():
+    from repro.core.telemetry import COUNTERS
+    COUNTERS.reset()
+    l1 = LocalCache(1 << 20, name="l1test")
+    l1.put("a", b"1" * 100)
+    l1.get("a")
+    l1.get("missing")
+    h = COUNTERS.get("l1test.hits")
+    m = COUNTERS.get("l1test.misses")
+    assert (h, m) == (1.0, 1.0)

@@ -1,0 +1,62 @@
+"""Erasure coding properties: any k of n reconstructs; kernel paths agree."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.erasure import ErasureCoder, encode_matrix, gf_matmul, gf_mul
+from repro.kernels.parity.ops import parity_fn_for_erasure
+
+
+def test_gf_mul_properties():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, 1000, dtype=np.uint8)
+    b = rng.integers(0, 256, 1000, dtype=np.uint8)
+    c = rng.integers(0, 256, 1000, dtype=np.uint8)
+    assert np.array_equal(gf_mul(a, b), gf_mul(b, a))
+    assert np.array_equal(gf_mul(a, np.uint8(1)), a)
+    assert np.array_equal(gf_mul(a, np.uint8(0)), np.zeros_like(a))
+    # distributivity over XOR
+    assert np.array_equal(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c))
+
+
+@given(k=st.integers(2, 6), extra=st.integers(1, 3),
+       size=st.integers(1, 3000), seed=st.integers(0, 999),
+       drop_seed=st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_any_k_of_n_reconstructs(k, extra, size, seed, drop_seed):
+    n = k + extra
+    rng = np.random.default_rng(seed)
+    chunk = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+    coder = ErasureCoder(k, n)
+    stripes = coder.encode(chunk)
+    keep = np.random.default_rng(drop_seed).choice(n, size=k, replace=False)
+    got = coder.decode({int(i): stripes[i] for i in keep}, len(chunk))
+    assert got == chunk
+
+
+def test_insufficient_stripes_raises():
+    coder = ErasureCoder(4, 5)
+    stripes = coder.encode(b"x" * 100)
+    with pytest.raises(ValueError):
+        coder.decode({0: stripes[0], 1: stripes[1], 2: stripes[2]}, 100)
+
+
+def test_parity_row_is_xor_for_4of5():
+    m = encode_matrix(4, 5)
+    assert np.array_equal(m[4], np.ones(4, np.uint8))
+
+
+def test_kernel_parity_matches_numpy():
+    rng = np.random.default_rng(3)
+    chunk = rng.integers(0, 256, 51200, dtype=np.uint8).tobytes()
+    a = ErasureCoder(4, 5).encode(chunk)
+    b = ErasureCoder(4, 5, parity_fn=parity_fn_for_erasure()).encode(chunk)
+    assert a == b
+
+
+def test_storage_overhead():
+    coder = ErasureCoder(4, 5)
+    chunk = b"z" * 524288
+    stripes = coder.encode(chunk)
+    total = sum(len(s) for s in stripes)
+    assert total == pytest.approx(1.25 * len(chunk), rel=0.01)  # paper: 25%

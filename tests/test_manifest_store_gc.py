@@ -1,0 +1,143 @@
+"""Manifest seal/open, store semantics, generational GC safety."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gc import GenerationalGC
+from repro.core.loader import ImageReader, create_image
+from repro.core.manifest import ZERO_CHUNK, open_manifest, read_public
+from repro.core.store import ChunkStore
+
+
+def make_store(tmp_path):
+    return ChunkStore(tmp_path / "store")
+
+
+def make_tree(seed=0, n=3, shape=(64, 64)):
+    rng = np.random.default_rng(seed)
+    return {f"t{i}": rng.standard_normal(shape).astype(np.float32)
+            for i in range(n)}
+
+
+def test_manifest_roundtrip(tmp_path):
+    store = make_store(tmp_path)
+    gc = GenerationalGC(store)
+    key = b"K" * 32
+    blob, stats = create_image(make_tree(), tenant="acme", tenant_key=key,
+                               store=store, root=gc.active, chunk_size=4096)
+    m = open_manifest(blob, key)
+    assert m.tenant == "acme"
+    assert len(m.chunks) == stats.total_chunks
+    # public read exposes chunk names but no keys
+    pub = read_public(blob)
+    assert all(len(c) == 3 for c in pub["chunks"])
+    assert b"".join(c.key for c in m.chunks) not in blob  # keys not in clear
+
+
+def test_manifest_wrong_key_fails(tmp_path):
+    store = make_store(tmp_path)
+    gc = GenerationalGC(store)
+    blob, _ = create_image(make_tree(), tenant="a", tenant_key=b"K" * 32,
+                           store=store, root=gc.active, chunk_size=4096)
+    with pytest.raises(ValueError):
+        open_manifest(blob, b"X" * 32)
+
+
+def test_manifest_body_tamper_fails(tmp_path):
+    import msgpack
+    store = make_store(tmp_path)
+    gc = GenerationalGC(store)
+    key = b"K" * 32
+    blob, _ = create_image(make_tree(), tenant="a", tenant_key=key,
+                           store=store, root=gc.active, chunk_size=4096)
+    outer = msgpack.unpackb(blob, raw=False)
+    body = msgpack.unpackb(outer["body"], raw=False)
+    body["chunks"][0][1] = "0" * 64         # swap a chunk name
+    outer["body"] = msgpack.packb(body, use_bin_type=True)
+    tampered = msgpack.packb(outer, use_bin_type=True)
+    with pytest.raises(ValueError):
+        open_manifest(tampered, key)        # whole-document authentication
+
+
+def test_put_if_absent_dedup(tmp_path):
+    store = make_store(tmp_path)
+    store.create_root("R1")
+    assert store.put_if_absent("R1", "abc", b"data") is True
+    assert store.put_if_absent("R1", "abc", b"data") is False
+    assert store.get_chunk("R1", "abc") == b"data"
+
+
+def test_zero_chunk_elision(tmp_path):
+    store = make_store(tmp_path)
+    gc = GenerationalGC(store)
+    tree = {"zeros": np.zeros((4096,), np.float32),
+            "data": np.ones((4096,), np.float32)}
+    blob, stats = create_image(tree, tenant="a", tenant_key=b"K" * 32,
+                               store=store, root=gc.active, chunk_size=4096)
+    assert stats.zero_chunks >= 4
+    m = open_manifest(blob, b"K" * 32)
+    zero_refs = [c for c in m.chunks if c.name == ZERO_CHUNK]
+    assert len(zero_refs) == stats.zero_chunks
+    # restore still reproduces the zeros
+    r = ImageReader(blob, b"K" * 32, store)
+    assert np.array_equal(r.tensor("zeros"), tree["zeros"])
+
+
+class TestGC:
+    def test_lifecycle_and_migration_safety(self, tmp_path):
+        store = make_store(tmp_path)
+        gc = GenerationalGC(store)
+        key = b"K" * 32
+        blobs = {}
+        for i in range(3):
+            blob, s = create_image(make_tree(seed=i), tenant="a", tenant_key=key,
+                                   store=store, root=gc.active, chunk_size=4096,
+                                   image_id=f"img{i}")
+            blobs[f"img{i}"] = blob
+        gc.new_root()
+        live = {"img0", "img2"}           # img1 is garbage
+        gc.migrate("R1", live_images=live)
+        # property: every chunk of every live manifest exists in new root
+        for img in live:
+            pub = read_public(store.get_manifest(gc.active, img))
+            for _i, name, _sha in pub["chunks"]:
+                if name != ZERO_CHUNK:
+                    assert store.has_chunk(gc.active, name)
+        # restores work from the new root
+        r = ImageReader(store.get_manifest(gc.active, "img0"), key, store,
+                        root=gc.active)
+        assert np.allclose(r.tensor("t0"), make_tree(seed=0)["t0"])
+        gc.expire("R1")
+        assert gc.delete_expired("R1") is True
+        assert "img1" not in store.list_manifests(gc.active)
+
+    def test_expired_read_freezes_deletion(self, tmp_path):
+        store = make_store(tmp_path)
+        gc = GenerationalGC(store)
+        key = b"K" * 32
+        blob, s = create_image(make_tree(), tenant="a", tenant_key=key,
+                               store=store, root="R1", chunk_size=4096,
+                               image_id="img")
+        gc.new_root()
+        gc.expire("R1")
+        # a straggler reads from the expired root -> alarm fires
+        pub = read_public(store.get_manifest("R1", "img"))
+        name = next(n for _, n, _s in pub["chunks"] if n != ZERO_CHUNK)
+        store.get_chunk("R1", name)
+        assert "R1" in gc.stats.alarms
+        assert gc.delete_expired("R1") is False   # deletion frozen
+        assert store.has_manifest("R1", "img")
+
+    def test_multiple_active_roots(self, tmp_path):
+        store = make_store(tmp_path)
+        gc = GenerationalGC(store)
+        r2 = gc.add_active_root()
+        assert set(gc.active_roots) == {"R1", r2}
+        key = b"K" * 32
+        # same tree into two active roots -> different salts, no cross-dedup
+        _, s1 = create_image(make_tree(), tenant="a", tenant_key=key,
+                             store=store, root="R1", chunk_size=4096)
+        _, s2 = create_image(make_tree(), tenant="a", tenant_key=key,
+                             store=store, root=r2, chunk_size=4096)
+        assert s1.unique_chunks == s2.unique_chunks  # both uploaded fresh
+        assert set(store.list_chunks("R1")).isdisjoint(store.list_chunks(r2))

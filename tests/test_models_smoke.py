@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model
+
+
+def make_batch(cfg, B=2, S=32, key=0):
+    k = jax.random.key(key)
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        return {
+            "tokens": jax.random.randint(k, (B, S - P), 0, cfg.vocab_size),
+            "patches": jax.random.normal(k, (B, P, cfg.d_model), jnp.bfloat16),
+            "labels": jax.random.randint(k, (B, S - P), 0, cfg.vocab_size),
+        }
+    if cfg.is_encdec:
+        return {
+            "frames": jax.random.normal(k, (B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_loss(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    loss = m.loss(params, make_batch(cfg))
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch} loss not finite"
+    # a plausible initial xent: ~ln(vocab)+-2
+    assert 2.0 < float(loss) < 10.0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_grad(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(lambda p: m.loss(p, batch))(params)
+    assert jnp.isfinite(loss)
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and float(gn) > 0, f"{arch} zero/NaN grads"
+    # one SGD step must change the loss
+    new = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2 = m.loss(new, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S, MAX = 2, 16, 32
+    if cfg.is_encdec:
+        state = m.init_decode_state(B, MAX, enc_len=S)
+        batch = {"frames": jax.random.normal(jax.random.key(1), (B, S, cfg.d_model), jnp.bfloat16)}
+    else:
+        state = m.init_decode_state(B, MAX)
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S - P), 0, cfg.vocab_size),
+                     "patches": jax.random.normal(jax.random.key(1), (B, P, cfg.d_model), jnp.bfloat16)}
+        else:
+            batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)}
+    logits, state = m.prefill(params, batch, state)
+    assert logits.shape[0] == B
+    assert not jnp.isnan(logits).any()
+    toks = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    for i in range(3):
+        logits, state = m.decode_step(params, state, toks, pos + i)
+        assert not jnp.isnan(logits).any(), f"{arch} NaN at decode step {i}"
+        toks = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+
+
+def test_decode_matches_train_logits():
+    """Teacher-forced decode must reproduce train-forward logits (tinyllama)."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    # full forward logits via loss path surrogate: use prefill at each prefix
+    state = m.init_decode_state(B, S + 4)
+    logits_pre, state = m.prefill(params, {"tokens": toks}, state)
+    # decode the next token teacher-forced, then compare against prefill of S+1
+    nxt = jax.random.randint(jax.random.key(4), (B,), 0, cfg.vocab_size)
+    logits_dec, _ = m.decode_step(params, state, nxt, jnp.full((B,), S, jnp.int32))
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    state2 = m.init_decode_state(B, S + 4)
+    logits_pre2, _ = m.prefill(params, {"tokens": toks2}, state2)
+    assert jnp.allclose(logits_dec, logits_pre2, atol=0.15), (
+        float(jnp.abs(logits_dec - logits_pre2).max()))

@@ -1,0 +1,118 @@
+"""HLO roofline analyzer: trip-count awareness, collective accounting."""
+import textwrap
+
+import pytest
+
+from repro.launch.roofline import analyze_hlo, parse_hlo
+
+HLO_WHILE = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p = (s32[], f32[8,128]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+      %w = f32[128,128]{1,0} constant({...})
+      %dot.1 = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,128]{1,0} all-reduce(%dot.1), replica_groups={{0,1,2,3}}, to_apply=%add
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,128]{1,0}) tuple(%ip, %ar)
+    }
+
+    %cond (p2: (s32[], f32[8,128])) -> pred[] {
+      %p2 = (s32[], f32[8,128]{1,0}) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+      %a = f32[8,128]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %tup = (s32[], f32[8,128]{1,0}) tuple(%z, %a)
+      %wh = (s32[], f32[8,128]{1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out = f32[8,128]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_while_trip_count_multiplies():
+    c = analyze_hlo(HLO_WHILE, total_devices=4)
+    # dot: 2*8*128*128 flops, x10 trips
+    assert c.dot_flops == pytest.approx(10 * 2 * 8 * 128 * 128)
+    # all-reduce: 2 * bytes * (n-1)/n, x10
+    ar_bytes = 8 * 128 * 4
+    assert c.collective_detail["all-reduce"] == pytest.approx(
+        10 * 2 * ar_bytes * 3 / 4)
+
+
+def test_parse_finds_entry():
+    comps, entry = parse_hlo(HLO_WHILE)
+    assert entry == "main"
+    assert "body" in comps and "cond" in comps
+
+
+HLO_COLLECTIVES = textwrap.dedent("""
+    HloModule m
+
+    ENTRY %main (a: bf16[64,256]) -> bf16[64,256] {
+      %a = bf16[64,256]{1,0} parameter(0)
+      %ag = bf16[64,256]{1,0} all-gather(%a), replica_groups=[16,16], dimensions={0}
+      %rs = bf16[4,256]{1,0} reduce-scatter(%ag), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, to_apply=%add
+      %cp = bf16[4,256]{1,0} collective-permute(%rs), source_target_pairs={{0,1}}
+      %a2a = bf16[4,256]{1,0} all-to-all(%cp), replica_groups={{0,1,2,3}}
+      ROOT %out = bf16[64,256]{1,0} all-gather(%a2a), replica_groups=[16,16], dimensions={0}
+    }
+""")
+
+
+def test_collective_accounting():
+    c = analyze_hlo(HLO_COLLECTIVES, total_devices=16)
+    d = c.collective_detail
+    ag = 64 * 256 * 2
+    assert d["all-gather"] == pytest.approx(2 * ag * 15 / 16)
+    rs = 4 * 256 * 2
+    assert d["reduce-scatter"] == pytest.approx(rs * 15)
+    assert d["collective-permute"] == pytest.approx(rs)
+    assert d["all-to-all"] == pytest.approx(rs * 3 / 4)
+
+
+def test_dots_inside_fusions_counted():
+    hlo = textwrap.dedent("""
+        HloModule f
+
+        %fused (fp0: f32[32,64], fp1: f32[64,16]) -> f32[32,16] {
+          %fp0 = f32[32,64]{1,0} parameter(0)
+          %fp1 = f32[64,16]{1,0} parameter(1)
+          ROOT %d = f32[32,16]{1,0} dot(%fp0, %fp1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+
+        ENTRY %main (x: f32[32,64], y: f32[64,16]) -> f32[32,16] {
+          %x = f32[32,64]{1,0} parameter(0)
+          %y = f32[64,16]{1,0} parameter(1)
+          ROOT %f = f32[32,16]{1,0} fusion(%x, %y), kind=kOutput, calls=%fused
+        }
+    """)
+    c = analyze_hlo(hlo, total_devices=1)
+    assert c.dot_flops == pytest.approx(2 * 32 * 64 * 16)
+
+
+def test_real_model_roofline_sane():
+    """Lower a tiny scanned model and check analyzer ~ analytic FLOPs."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    L, B, D = 6, 4, 128
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    hlo = jax.jit(f).lower(w, x).compile().as_text()
+    c = analyze_hlo(hlo, total_devices=1)
+    want = L * 2 * B * D * D
+    assert c.dot_flops == pytest.approx(want, rel=0.01)
