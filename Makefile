@@ -1,0 +1,11 @@
+# Offline-friendly entry points (no network-dependent packages).
+.PHONY: test bench bench-read
+
+test:            ## tier-1 suite: PYTHONPATH=src pytest -x -q
+	./scripts/test.sh
+
+bench:           ## all paper-figure benchmarks (CSV to stdout)
+	PYTHONPATH=src:. python benchmarks/run.py
+
+bench-read:      ## Fig 11 + serial-vs-batched cold restore comparison
+	PYTHONPATH=src:. python benchmarks/run.py e2e_read_latency

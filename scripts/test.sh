@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 test suite, one command from a fresh clone, fully offline:
+# sets PYTHONPATH=src and runs pytest. `hypothesis` is optional — when
+# absent, tests/conftest.py swaps in the vendored deterministic stub.
+#
+#   scripts/test.sh              # whole suite (-x -q)
+#   scripts/test.sh tests/test_cache.py -k lru   # any pytest args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "$#" -eq 0 ]; then
+    exec python -m pytest -x -q tests
+fi
+exec python -m pytest -x -q "$@"

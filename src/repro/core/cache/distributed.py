@@ -12,6 +12,8 @@ the work done, eliminating the retry metastability mode.
 """
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from repro.core.cache.hashring import HashRing
@@ -66,35 +68,41 @@ class CacheNode:
         self.failed = False
         self.get_lat = LatencyRecorder(f"{name}.get")
         self.put_lat = LatencyRecorder(f"{name}.put")
+        # one lock per node: parallel batched fetches hit different nodes
+        # concurrently but each node serves its stripes serially (and the
+        # numpy Generator behind the latency model is not thread-safe)
+        self._lock = threading.Lock()
 
     def get(self, key: str):
         """Returns (client latency seconds, bytes | None); None = miss.
         Server-side service time is recorded separately (paper Fig 10)."""
         if self.failed:
             return (0.1, None)  # timeout
-        serve = self.latency.serve_sample()
-        v = self.mem.get(key)
-        if v is None:
-            v = self.flash.get(key)
-            if v is not None:
-                serve += self.flash_extra_s
-                self.mem.put(key, v)       # promote
-        self.get_lat.record(serve)
-        return (serve + self.latency.net_sample(), v)
+        with self._lock:
+            serve = self.latency.serve_sample()
+            v = self.mem.get(key)
+            if v is None:
+                v = self.flash.get(key)
+                if v is not None:
+                    serve += self.flash_extra_s
+                    self.mem.put(key, v)       # promote
+            self.get_lat.record(serve)
+            return (serve + self.latency.net_sample(), v)
 
     def put(self, key: str, value: bytes):
         if self.failed:
             return 0.1
-        # PUT: write path; lognormal body only (the Rust server's p99.99
-        # stays < 4x median, Fig 10) plus a small writeback mode
-        serve = float(self.latency.rng.lognormal(
-            self.latency.mu_serve, self.latency.sigma)) * 3.0
-        if self.latency.rng.random() < 0.04:
-            serve *= 2.2                   # writeback stall mode (Fig 10)
-        self.flash.put(key, value)
-        self.mem.put(key, value)
-        self.put_lat.record(serve)
-        return serve + self.latency.net_sample()
+        with self._lock:
+            # PUT: write path; lognormal body only (the Rust server's p99.99
+            # stays < 4x median, Fig 10) plus a small writeback mode
+            serve = float(self.latency.rng.lognormal(
+                self.latency.mu_serve, self.latency.sigma)) * 3.0
+            if self.latency.rng.random() < 0.04:
+                serve *= 2.2                   # writeback stall mode (Fig 10)
+            self.flash.put(key, value)
+            self.mem.put(key, value)
+            self.put_lat.record(serve)
+            return serve + self.latency.net_sample()
 
 
 class DistributedCache:

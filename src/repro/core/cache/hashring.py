@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import threading
 from collections import defaultdict
 
 
@@ -16,6 +17,7 @@ class HashRing:
         self.vnodes = vnodes
         self.load_factor = load_factor
         self.loads = defaultdict(int)
+        self._load_lock = threading.Lock()
         self._nodes = set()
         self._ring: list[tuple[int, str]] = []
         for n in nodes:
@@ -39,7 +41,10 @@ class HashRing:
         return sorted(self._nodes)
 
     def _avg_load(self) -> float:
-        total = sum(self.loads.values())
+        # parallel fetch workers record placements concurrently; iterating
+        # the dict unlocked races those inserts
+        with self._load_lock:
+            total = sum(self.loads.values())
         return total / max(1, len(self._nodes))
 
     def lookup(self, key: str, count: int = 1, bound_loads: bool = False,
@@ -62,7 +67,8 @@ class HashRing:
             scanned += 1
             if node in seen or node not in self._nodes:
                 continue
-            if bound_loads and len(out) == 0 and self.loads[node] > cap \
+            if bound_loads and len(out) == 0 \
+                    and self.loads.get(node, 0) > cap \
                     and len(self._nodes) > count:
                 continue
             seen.add(node)
@@ -76,4 +82,5 @@ class HashRing:
         return out
 
     def record_placement(self, node: str, weight: int = 1):
-        self.loads[node] += weight
+        with self._load_lock:
+            self.loads[node] += weight

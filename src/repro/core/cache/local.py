@@ -16,6 +16,11 @@ class LocalCache:
         COUNTERS.inc(f"{self.name}.hits" if v is not None else f"{self.name}.misses")
         return v
 
+    def peek(self, key: str):
+        """`get` without touching hit/miss telemetry (used by the reader's
+        single-flight double-check so stampedes don't distort hit rates)."""
+        return self.lru.get(key)
+
     def put(self, key: str, value: bytes):
         self.lru.put(key, value)
 

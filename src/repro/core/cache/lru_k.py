@@ -3,6 +3,7 @@ so one-shot scans (the cron-spike workload) can't flush the hot set."""
 from __future__ import annotations
 
 import heapq
+import threading
 from collections import deque
 
 
@@ -12,6 +13,9 @@ class LRUK:
     Keys with fewer than k recorded accesses have backward-k-distance
     infinity and are evicted first (classic LRU-k policy), ordered by their
     most recent access among themselves.
+
+    get/put/remove are thread-safe (one RLock): the batched read path
+    backfills tiers from parallel fetch workers.
     """
 
     def __init__(self, capacity_bytes: int, k: int = 2):
@@ -22,6 +26,7 @@ class LRUK:
         self.used = 0
         self.clock = 0
         self.evictions = 0
+        self._lock = threading.RLock()
 
     def __contains__(self, key: str) -> bool:
         return key in self.data
@@ -32,18 +37,20 @@ class LRUK:
         h.append(self.clock)
 
     def get(self, key: str):
-        if key not in self.data:
-            return None
-        self._touch(key)
-        return self.data[key]
+        with self._lock:
+            if key not in self.data:
+                return None
+            self._touch(key)
+            return self.data[key]
 
     def put(self, key: str, value: bytes):
-        if key in self.data:
-            self.used -= len(self.data[key])
-        self.data[key] = value
-        self.used += len(value)
-        self._touch(key)
-        self._evict()
+        with self._lock:
+            if key in self.data:
+                self.used -= len(self.data[key])
+            self.data[key] = value
+            self.used += len(value)
+            self._touch(key)
+            self._evict()
 
     def _priority(self, key: str):
         h = self.hist.get(key)
@@ -66,9 +73,10 @@ class LRUK:
                 self.evictions += 1
 
     def remove(self, key: str):
-        if key in self.data:
-            self.used -= len(self.data[key])
-            del self.data[key]
+        with self._lock:
+            if key in self.data:
+                self.used -= len(self.data[key])
+                del self.data[key]
 
     def keys(self):
         return list(self.data)

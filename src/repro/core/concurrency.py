@@ -35,9 +35,14 @@ class RejectingLimiter:
 
 
 class BlockingLimiter:
-    """For internal fetch paths: bounds concurrent origin reads."""
+    """For internal fetch paths: bounds concurrent origin reads.
+
+    The batched reader's fetch pool acquires this around every origin
+    GET, so total origin concurrency stays bounded no matter how many
+    batches or readers are in flight. Usable as a context manager."""
 
     def __init__(self, max_inflight: int):
+        self.max_inflight = max_inflight
         self._sem = threading.Semaphore(max_inflight)
 
     def acquire(self):
@@ -45,3 +50,11 @@ class BlockingLimiter:
 
     def release(self):
         self._sem.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False

@@ -40,9 +40,12 @@ class LatencyRecorder:
     def __init__(self, name: str = ""):
         self.name = name
         self.samples: list[float] = []
+        self._lock = threading.Lock()
 
     def record(self, seconds: float):
-        self.samples.append(seconds)
+        # parallel fetch workers record concurrently
+        with self._lock:
+            self.samples.append(seconds)
 
     def percentile(self, p: float) -> float:
         if not self.samples:

@@ -122,14 +122,24 @@ def parse_hlo(text: str) -> tuple[dict, str]:
     return comps, entry
 
 
+# "bf16[..]{..} all-gather(...)" / "(f32[...], ...) while(...)"
+# -> the op token right before its '(' argument list
+_OP_TOKEN_RES = (re.compile(r"[\}\])]\s*([a-z][a-z0-9\-]*)\("),
+                 re.compile(r"^\S+\s+([a-z][a-z0-9\-]*)\("))
+
+
+def _locate_op(op_line: str) -> tuple:
+    """(op kind, index of its opening paren) — the single source of truth
+    for both kind extraction and operand-list location."""
+    for rx in _OP_TOKEN_RES:
+        m = rx.search(op_line)
+        if m:
+            return m.group(1), m.end() - 1
+    return "", -1
+
+
 def _op_kind(op_line: str) -> str:
-    # "bf16[..]{..} all-gather(...)" / "(f32[...], ...) while(...)"
-    # -> the op token right before its '(' argument list
-    m = re.search(r"[\}\])]\s*([a-z][a-z0-9\-]*)\(", op_line)
-    if m:
-        return m.group(1)
-    m = re.search(r"^\S+\s+([a-z][a-z0-9\-]*)\(", op_line)
-    return m.group(1) if m else ""
+    return _locate_op(op_line)[0]
 
 
 def _group_size(op_line: str, default: int) -> int:
@@ -142,11 +152,32 @@ def _group_size(op_line: str, default: int) -> int:
     return default
 
 
+def _operand_region(op_line: str) -> str:
+    """The argument list of the op call, balanced-paren aware.
+
+    Optimized HLO prints operands with inline types — possibly tuple
+    types containing parens and commas: ``get-tuple-element((s32[],
+    f32[4,128]{1,0}) %while.34), index=1`` — so neither a naive
+    ``[^)]*`` match nor a comma split is safe."""
+    _, start = _locate_op(op_line)
+    if start < 0:
+        return ""
+    depth = 0
+    for i in range(start, len(op_line)):
+        if op_line[i] == "(":
+            depth += 1
+        elif op_line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return op_line[start + 1:i]
+    return op_line[start + 1:]
+
+
 def _operand_names(op_line: str):
-    m = re.search(r"\(([^)]*)\)", op_line[op_line.index("("):] if "(" in op_line else "")
-    if not m:
-        return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip().startswith("%")]
+    """Operand instruction names, in order. Handles both parameter-style
+    ``dot(%x, %w)`` and optimized-HLO typed operands
+    ``dot(f32[4,128]{1,0} %x, f32[128,128]{1,0} %w)``."""
+    return re.findall(r"%([\w\.\-]+)", _operand_region(op_line))
 
 
 @dataclass

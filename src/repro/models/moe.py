@@ -211,19 +211,24 @@ def _moe_sort(p, x: jnp.ndarray, cfg: ModelConfig, dtype) -> jnp.ndarray:
     keep = slot < cap
     token_of = order // K
 
-    # dispatch: (E*cap, D) buffer
-    buf_idx = jnp.where(keep, sorted_e * cap + slot, E * cap)       # overflow row
-    buf = jnp.zeros((E * cap + 1, D), dtype)
+    # dispatch: (E*cap, D) buffer. Dropped assignments scatter to index
+    # E*cap, which is out of bounds and discarded by mode="drop" — no
+    # overflow row. Keeping the buffer exactly E*cap matters under SPMD:
+    # a (E*cap + 1)-row operand doesn't divide the mesh axes, and XLA's
+    # padded-gather partitioning returns wrong values for it (observed on
+    # CPU SPMD, jax 0.4.37), which broke this path vs the shard_map impl.
+    buf_idx = jnp.where(keep, sorted_e * cap + slot, E * cap)
+    buf = jnp.zeros((E * cap, D), dtype)
     buf = buf.at[buf_idx].add(xf[token_of].astype(dtype), mode="drop")
-    ebuf = buf[: E * cap].reshape(E, cap, D)
+    ebuf = buf.reshape(E, cap, D)
     ebuf = logical_constraint(ebuf, ("expert", "fsdp", None))
 
     out_buf = _expert_ffn(p, ebuf, cfg.mlp_type, dtype)
     out_buf = logical_constraint(out_buf, ("expert", "fsdp", None))
-    out_flat = jnp.concatenate(
-        [out_buf.reshape(E * cap, D), jnp.zeros((1, D), dtype)], axis=0)
+    out_flat = out_buf.reshape(E * cap, D)
 
-    gathered = out_flat[buf_idx]                                    # (T*K, D)
+    # dropped slots gather row 0 but are zero-weighted via `keep` below
+    gathered = out_flat[jnp.where(keep, buf_idx, 0)]                # (T*K, D)
     w = (gates.reshape(T * K)[order] * keep).astype(dtype)
     y = jnp.zeros((T, D), dtype).at[token_of].add(gathered * w[:, None])
 

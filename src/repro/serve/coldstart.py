@@ -13,6 +13,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core.blockdev import DEFAULT_PARALLELISM
 from repro.core.loader import ImageReader
 from repro.core.telemetry import COUNTERS
 from repro.serve.engine import ServeEngine
@@ -21,8 +22,14 @@ from repro.train.checkpoint import tree_from_flat
 
 def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
                l1=None, l2=None, root=None, max_batch=4, max_len=128,
-               limiter=None) -> tuple:
-    """Returns (engine, stats)."""
+               limiter=None, fetch_limiter=None, parallelism=DEFAULT_PARALLELISM,
+               batched=True) -> tuple:
+    """Returns (engine, stats).
+
+    The restore goes through the batched read path (`parallelism`-wide
+    origin pipeline, optionally bounded by `fetch_limiter`, a
+    BlockingLimiter); `batched=False` keeps the serial chunk loop for
+    comparison. `limiter` is the admission-control RejectingLimiter."""
     if limiter is not None and not limiter.try_acquire():
         COUNTERS.inc("serve.coldstart_rejected")
         raise RuntimeError("cold-start rejected: concurrency limit")
@@ -30,9 +37,9 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
         t0 = time.time()
         before_origin = COUNTERS.get("read.origin_fetches")
         reader = ImageReader(manifest_blob, tenant_key, store, l1=l1, l2=l2,
-                             root=root)
+                             root=root, concurrency=fetch_limiter)
         template = model.param_shapes()
-        flat = reader.restore_tree()
+        flat = reader.restore_tree(batched=batched, parallelism=parallelism)
         params = tree_from_flat(template, flat)
         params = jax.tree.map(
             lambda p: p.astype(np.float32) if p.dtype == np.float64 else p, params)
@@ -43,6 +50,8 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
             "origin_fetches": COUNTERS.get("read.origin_fetches") - before_origin,
             "image_bytes": reader.layout.image_size,
             "l2_sim_latency_p50": reader.reader.read_lat.percentile(50),
+            "sim_pipelined_s": reader.reader.last_batch.get("sim_pipelined_s"),
+            "sim_serial_s": reader.reader.last_batch.get("sim_serial_s"),
         }
         return engine, stats
     finally:
@@ -51,20 +60,24 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
 
 
 def expert_shard_restore(reader: ImageReader, num_experts: int,
-                         ep_rank: int, ep_size: int) -> dict:
+                         ep_rank: int, ep_size: int,
+                         parallelism: int = DEFAULT_PARALLELISM) -> dict:
     """Restore only this worker's expert slices (plus all non-expert
-    tensors): the EP sparsity path. Returns {name: array-or-shard}."""
-    out = {}
+    tensors): the EP sparsity path. Returns {name: array-or-shard}.
+
+    All tensors' byte ranges go into a single batched `restore_shards`
+    call, so the whole shard restore is one pipelined fetch."""
     lo = num_experts * ep_rank // ep_size
     hi = num_experts * (ep_rank + 1) // ep_size
+    shard_slices = {}
     for name in reader.tensor_names():
         t = reader.layout.tensors[name]
         edim = next((i for i, d in enumerate(t.shape)
                      if d == num_experts and len(t.shape) >= 3), None)
         if edim is None:
-            out[name] = reader.tensor(name)
+            shard_slices[name] = None
         else:
             sl = [(0, d) for d in t.shape]
             sl[edim] = (lo, hi)
-            out[name] = reader.tensor_shard(name, sl)
-    return out
+            shard_slices[name] = sl
+    return reader.restore_shards(shard_slices, parallelism=parallelism)

@@ -1,0 +1,200 @@
+"""Minimal offline stand-in for the `hypothesis` package.
+
+This environment has no network access, so `hypothesis` cannot be
+installed. `conftest.py` registers this module under the names
+``hypothesis`` and ``hypothesis.strategies`` ONLY when the real package
+is absent, so the property tests collect and run everywhere.
+
+Semantics: ``@given`` draws `max_examples` (from ``@settings``, default
+25) pseudo-random examples per test from seeded `random.Random` streams —
+deterministic per test name, so failures reproduce. No shrinking, no
+coverage-guided search; this is a compatibility shim, not a replacement.
+
+Supported surface (what this repo's tests use, plus a little slack):
+``given`` (positional strategies right-aligned to the test's parameters,
+exactly like hypothesis, and keyword strategies), ``settings``
+(max_examples / deadline / suppress_health_check accepted), ``assume``,
+``HealthCheck``, and ``strategies``: integers, binary, booleans, floats,
+sampled_from, just, lists, tuples, text.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import sys
+import types
+
+__version__ = "0.0-stub"
+
+
+class HealthCheck:
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Reject the current example when `condition` is falsy."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+        return SearchStrategy(draw)
+
+
+def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+           allow_infinity=False) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def binary(min_size=0, max_size=64) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return bytes(rng.getrandbits(8) for _ in range(n))
+    return SearchStrategy(draw)
+
+
+def text(alphabet=string.printable, min_size=0, max_size=64) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(alphabet) for _ in range(n))
+    return SearchStrategy(draw)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=16) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strats) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
+class settings:
+    """Decorator capturing max_examples; other knobs are accepted and
+    ignored (deadline, suppress_health_check, ...)."""
+
+    def __init__(self, max_examples: int = 25, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if hasattr(fn, "_stub_given_wrapper"):
+            fn._stub_max_examples = self.max_examples
+        else:
+            fn._stub_settings = self
+        return fn
+
+
+def given(*pos_strategies, **kw_strategies):
+    """Run the test once per drawn example.
+
+    Positional strategies bind to the test's rightmost parameters (the
+    hypothesis rule); everything not bound by a strategy stays in the
+    wrapper's signature so pytest keeps injecting fixtures (self, env,
+    tmp_path, ...)."""
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        mapping = dict(kw_strategies)
+        if pos_strategies:
+            tail = names[len(names) - len(pos_strategies):]
+            mapping.update(dict(zip(tail, pos_strategies)))
+        unknown = set(mapping) - set(names)
+        if unknown:
+            raise TypeError(f"@given strategies for unknown params: {unknown}")
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", None)
+            if n is None:
+                st_obj = getattr(fn, "_stub_settings", None)
+                n = st_obj.max_examples if st_obj is not None else 25
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < n * 50:
+                attempts += 1
+                drawn = {k: s.draw(rng) for k, s in mapping.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise _Unsatisfied(
+                    f"{fn.__qualname__}: no example satisfied assume()")
+
+        wrapper._stub_given_wrapper = True
+        # pytest must see only the fixture parameters
+        keep = [p for name, p in sig.parameters.items() if name not in mapping]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__   # stop signature introspection recursion
+        return wrapper
+
+    return decorate
+
+
+def install() -> types.ModuleType:
+    """Register this shim as `hypothesis` (+ `.strategies`) in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "binary", "booleans", "floats", "sampled_from",
+                 "just", "lists", "tuples", "text"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.__version__ = __version__
+    hyp.__is_stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    return hyp

@@ -1,0 +1,286 @@
+"""Batched, pipelined read path: coalescing, single-flight dedup,
+limiter-bounded parallel origin fetch, and byte-identity with the serial
+path (zero chunks and COW overlays included)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.blockdev import CowBlockDevice, pipelined_latency
+from repro.core.cache.distributed import DistributedCache
+from repro.core.cache.local import LocalCache
+from repro.core.concurrency import BlockingLimiter
+from repro.core.gc import GenerationalGC
+from repro.core.layout import ImageWriter, build_layout, ranges_to_chunks
+from repro.core.loader import ImageReader, create_image
+from repro.core.manifest import ZERO_CHUNK
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+
+KEY = b"T" * 32
+CS = 4096
+
+
+class CountingStore(ChunkStore):
+    """ChunkStore that tracks concurrent + total get_chunk calls."""
+
+    def __init__(self, root_dir, delay_s=0.0):
+        super().__init__(root_dir)
+        self.delay_s = delay_s
+        self.inflight = 0
+        self.max_inflight = 0
+        self.gets = 0
+        self._cnt_lock = threading.Lock()
+
+    def get_chunk(self, root, name):
+        with self._cnt_lock:
+            self.inflight += 1
+            self.gets += 1
+            self.max_inflight = max(self.max_inflight, self.inflight)
+        try:
+            if self.delay_s:
+                time.sleep(self.delay_s)
+            return super().get_chunk(root, name)
+        finally:
+            with self._cnt_lock:
+                self.inflight -= 1
+
+
+def make_env(tmp_path, store_cls=ChunkStore, **store_kw):
+    store = store_cls(tmp_path / "s", **store_kw)
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(11)
+    tree = {
+        "a/w": rng.standard_normal((96, 64)).astype(np.float32),
+        "a/dup": rng.standard_normal((7, 11)).astype(np.float32),
+        "b/zeros": np.zeros((3 * CS // 4,), np.uint8),   # zero chunks
+        "b/i8": rng.integers(-128, 127, (5000,)).astype(np.int8),
+        "scalar": np.float32(-1.5),
+    }
+    blob, stats = create_image(tree, tenant="t", tenant_key=KEY, store=store,
+                               root=gc.active, chunk_size=CS)
+    return store, gc, tree, blob, stats
+
+
+def image_truth(tree):
+    lay = build_layout(tree, CS)
+    wr = ImageWriter(lay)
+    for k, v in tree.items():
+        wr.put(k, v)
+    return wr.buf.tobytes()
+
+
+# --------------------------------------------------------------- identity
+
+def test_read_many_matches_serial_random_ranges(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path)
+    truth = image_truth(tree)
+    r = ImageReader(blob, KEY, store)
+    rng = np.random.default_rng(3)
+    ranges = []
+    for _ in range(40):   # overlapping, unsorted, duplicate ranges
+        off = int(rng.integers(0, len(truth) - 2))
+        ln = int(rng.integers(1, min(3 * CS, len(truth) - off)))
+        ranges.append((off, ln))
+    ranges += ranges[:5]
+    got = r.reader.read_many(ranges, parallelism=6)
+    for (off, ln), buf in zip(ranges, got):
+        assert buf == truth[off:off + ln]
+    # serial path agrees
+    r2 = ImageReader(blob, KEY, store)
+    for off, ln in ranges[:10]:
+        assert r2.reader.read(off, ln) == truth[off:off + ln]
+
+
+def test_restore_tree_batched_identical_and_zero_chunks(tmp_path):
+    store, gc, tree, blob, stats = make_env(tmp_path)
+    assert stats.zero_chunks > 0        # the fixture really has zero chunks
+    rb = ImageReader(blob, KEY, store).restore_tree()
+    rs = ImageReader(blob, KEY, store).restore_tree(batched=False)
+    for n, want in tree.items():
+        assert np.array_equal(rb[n], np.asarray(want)), n
+        assert np.array_equal(rb[n], rs[n]), n
+        assert rb[n].dtype == np.asarray(want).dtype
+
+
+def test_tensor_shard_batched_matches(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path)
+    r = ImageReader(blob, KEY, store)
+    w = np.asarray(tree["a/w"])
+    assert np.array_equal(r.tensor_shard("a/w", [(16, 48), (0, 64)]), w[16:48])
+    assert np.array_equal(r.tensor_shard("a/w", [(0, 96), (8, 40)]), w[:, 8:40])
+    sc = r.restore_shards({"scalar": None, "a/dup": [(2, 5), (0, 11)]})
+    assert sc["scalar"] == np.float32(-1.5)
+    assert np.array_equal(sc["a/dup"], np.asarray(tree["a/dup"])[2:5])
+    # scalars come back as 0-d ndarrays, exactly like the serial path
+    serial_scalar = ImageReader(blob, KEY, store).tensor("scalar")
+    assert type(sc["scalar"]) is type(serial_scalar)
+    assert sc["scalar"].shape == serial_scalar.shape == ()
+
+
+def test_prefetch_warms_tiers_without_materializing(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore)
+    l1 = LocalCache(64 << 20, name="l1pf")
+    r = ImageReader(blob, KEY, store, l1=l1)
+    idxs = list(range(r.layout.num_chunks))
+    store.gets = 0
+    out = r.prefetch(idxs)
+    assert out is None                      # nothing accumulated
+    uniq = len({c.name for c in r.manifest.chunks if c.name != ZERO_CHUNK})
+    assert store.gets == uniq
+    store.gets = 0
+    flat = r.restore_tree()                 # all L1 now: no origin traffic
+    assert store.gets == 0
+    for n, want in tree.items():
+        assert np.array_equal(flat[n], np.asarray(want)), n
+
+
+def test_cow_overlay_batched_reads(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path)
+    dev = CowBlockDevice(ImageReader(blob, KEY, store).reader)
+    ref = ImageReader(blob, KEY, store).reader
+    span = 6 * CS
+    assert dev.read(0, span) == ref.read(0, span)
+    rng = np.random.default_rng(5)
+    expected = bytearray(ref.read(0, span))
+    for _ in range(12):   # interleave unaligned writes and full reads
+        off = int(rng.integers(0, span - 1))
+        ln = int(rng.integers(1, min(3 * 4096, span - off)))
+        payload = rng.integers(0, 256, ln, dtype=np.uint8).tobytes()
+        dev.write(off, payload)
+        expected[off:off + ln] = payload
+        assert dev.read(0, span) == bytes(expected)
+        off2 = int(rng.integers(0, span - 2))
+        ln2 = int(rng.integers(1, span - off2))
+        assert dev.read(off2, ln2) == bytes(expected[off2:off2 + ln2])
+
+
+# ------------------------------------------------------------- coalescing
+
+def test_overlapping_ranges_fetch_each_chunk_once(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore)
+    r = ImageReader(blob, KEY, store)
+    # three ranges covering the same two chunks
+    ranges = [(0, CS), (CS // 2, CS), (0, 2 * CS)]
+    store.gets = 0
+    r.reader.read_many(ranges, parallelism=4)
+    want = len({c.name for c in r.manifest.chunks
+                if c.index in ranges_to_chunks(ranges, CS)
+                and c.name != ZERO_CHUNK})
+    assert store.gets == want
+
+
+def test_fetch_chunks_dedups_shared_chunk_names(tmp_path):
+    """Two identical tensors share chunk names; one origin GET serves both."""
+    store = CountingStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((CS // 4, 2)).astype(np.float32)  # 2 full chunks
+    blob, stats = create_image({"x": w, "y": w.copy()}, tenant="t",
+                               tenant_key=KEY, store=store, root=gc.active,
+                               chunk_size=CS)
+    assert stats.dedup_chunks > 0
+    r = ImageReader(blob, KEY, store)
+    store.gets = 0
+    flat = r.restore_tree()
+    assert np.array_equal(flat["x"], w) and np.array_equal(flat["y"], w)
+    uniq = len({c.name for c in r.manifest.chunks if c.name != ZERO_CHUNK})
+    assert store.gets == uniq
+
+
+# ------------------------------------------------------------ concurrency
+
+def test_parallel_fetch_honors_blocking_limiter(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore,
+                                        delay_s=0.002)
+    lim = BlockingLimiter(3)
+    r = ImageReader(blob, KEY, store, concurrency=lim)
+    r.restore_tree(parallelism=8)      # pool wider than the limiter
+    assert store.max_inflight <= 3
+    assert store.max_inflight >= 2     # and it really ran in parallel
+
+
+def test_singleflight_stampede_one_origin_fetch_per_chunk(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore,
+                                        delay_s=0.002)
+    l1 = LocalCache(64 << 20, name="l1sf")
+    r = ImageReader(blob, KEY, store, l1=l1)
+    idxs = list(range(r.layout.num_chunks))
+    barrier = threading.Barrier(6)
+    results, errs = [], []
+
+    def work():
+        try:
+            barrier.wait()
+            results.append(r.reader.fetch_chunks(idxs, parallelism=4))
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    uniq = len({c.name for c in r.manifest.chunks if c.name != ZERO_CHUNK})
+    # single-flight + L1 backfill: every chunk name leaves origin once
+    assert store.gets == uniq
+    truth = image_truth(tree)
+    for res in results:
+        for i in idxs:
+            assert res[i] == truth[i * CS:(i + 1) * CS]
+
+
+def test_batched_and_serial_hit_same_tiers(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path)
+    COUNTERS.reset()
+    l1 = LocalCache(64 << 20, name="l1t")
+    l2 = DistributedCache(num_nodes=6, seed=0)
+    ImageReader(blob, KEY, store, l1=l1, l2=l2).restore_tree()
+    origin = COUNTERS.get("read.origin_fetches")
+    assert origin > 0
+    ImageReader(blob, KEY, store, l1=l1, l2=l2).restore_tree()
+    assert COUNTERS.get("read.origin_fetches") == origin      # L1 absorbs
+    ImageReader(blob, KEY, store, l1=LocalCache(64 << 20, name="l1u"),
+                l2=l2).restore_tree()
+    assert COUNTERS.get("read.origin_fetches") == origin      # L2 absorbs
+
+
+# ---------------------------------------------------------------- speedup
+
+def test_pipelined_latency_model():
+    assert pipelined_latency([], 8) == 0.0
+    assert pipelined_latency([1.0] * 8, 8) == pytest.approx(1.0)
+    assert pipelined_latency([1.0] * 16, 8) == pytest.approx(2.0)
+    assert pipelined_latency([1.0] * 16, 1) == pytest.approx(16.0)
+    assert pipelined_latency([4.0, 1.0, 1.0, 1.0], 2) == pytest.approx(4.0)
+
+
+def test_cold_restore_batched_faster_than_serial(tmp_path):
+    """With a real (simulated) origin RTT, batched cold restore wall clock
+    scales with the deepest miss, not the sum of misses."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(1)
+    tree = {"w": rng.standard_normal((CS * 16 // 4,)).astype(np.float32)}
+    blob, stats = create_image(tree, tenant="t", tenant_key=KEY, store=store,
+                               root=gc.active, chunk_size=CS)
+    n_chunks = stats.total_chunks - stats.zero_chunks
+    assert n_chunks >= 16
+    # RTT >> per-chunk CPU (decrypt ~1.3ms) so the pipeline effect dominates
+    delay = 0.02
+    rs = ImageReader(blob, KEY, store, origin_delay_s=delay)
+    t0 = time.perf_counter()
+    flat_serial = rs.restore_tree(batched=False)
+    t_serial = time.perf_counter() - t0
+    rb = ImageReader(blob, KEY, store, origin_delay_s=delay)
+    t0 = time.perf_counter()
+    flat_batched = rb.restore_tree(parallelism=8)
+    t_batched = time.perf_counter() - t0
+    assert np.array_equal(flat_serial["w"], flat_batched["w"])
+    # 8 chunks x 4ms serial vs ~1 wave of 8; demand >=2.5x to stay unflaky
+    assert t_serial / t_batched > 2.5, (t_serial, t_batched)
+    # the simulated model shows the full effect deterministically
+    lb = rb.reader.last_batch
+    assert lb["sim_serial_s"] / lb["sim_pipelined_s"] >= 4.0
