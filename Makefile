@@ -4,8 +4,8 @@
 test:            ## tier-1 suite: PYTHONPATH=src pytest -x -q
 	./scripts/test.sh
 
-bench:           ## all paper-figure benchmarks (CSV to stdout)
+bench:           ## all paper-figure benchmarks (CSV to stdout; also writes BENCH_e2e.json)
 	PYTHONPATH=src:. python benchmarks/run.py
 
-bench-read:      ## Fig 11 + serial-vs-batched cold restore comparison
+bench-read:      ## Fig 11 + serial / batched-fetch / batched-fetch+decode restore comparison -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py e2e_read_latency

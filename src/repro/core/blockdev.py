@@ -1,28 +1,41 @@
 """Demand-paged block device over the chunk store + page-granular COW
-overlay (paper §2.1), with a batched, pipelined multi-chunk read path
-(paper §2.2: cold-start latency is set by how much of the fetch pipeline
-stays in flight, not by per-chunk cost).
+overlay (paper §2.1), with the restore data path split into two explicit
+stages (paper §2.2/§3.1: cold-start latency is set by how much of the
+fetch AND post-fetch pipeline stays dense, not by per-chunk cost):
 
-``TieredReader`` is the worker's read path: L1 local cache -> L2
-distributed cache -> origin (S3 stand-in), with decrypt+verify after fetch
-and L2 backfill on origin reads (write-on-miss, as in the paper).
+  stage F — fetch-I/O only (``fetch_ciphertexts``): L1 probe ->
+    single-flight claim -> batched L2 stripe fetch -> parallel,
+    limiter-bounded origin fetch. Nothing is decrypted here; the stage
+    produces a ``FetchedBatch`` of ciphertexts.
+  stage D — decode (``repro.core.decode.BatchDecoder``): ONE batched
+    SHA verify + ONE batched AES-CTR keystream pass over the whole
+    fetched set (``convergent.decrypt_chunks`` /
+    ``aes.ctr_keystream_many``), instead of a per-chunk decrypt loop.
 
-Two read APIs:
+This inverts the PR 1 control flow: instead of each worker *pulling* one
+chunk through every tier (with decrypt squeezed onto the caller thread,
+GIL-bound), chunks are *pushed* through staged batches — all I/O in
+flight together, then one dense vectorized decode.
 
-* Serial (``fetch_chunk`` / ``read``): one chunk at a time; each access
-  records its end-to-end simulated latency in ``read_lat``. This is the
-  reference path and what small COW page faults use.
+Three read APIs:
+
+* Serial (``fetch_chunk`` / ``read``): one chunk at a time, per-chunk
+  ``decrypt_chunk``; each access records its end-to-end simulated
+  latency in ``read_lat``. This is the oracle path — the staged batch
+  path is tested byte-identical against it.
 * Batched (``fetch_chunks`` / ``read_many``): callers hand over every
   byte range they will need; the reader coalesces them into a
-  deduplicated chunk set, probes L1 serially (cheap), then fetches all
-  misses through a thread pool of ``parallelism`` workers. Origin fetches
-  are additionally bounded by the optional ``concurrency``
-  (``BlockingLimiter``) exactly as on the serial path. Concurrent
-  requests for the same chunk *name* — a cache-miss stampede across
-  threads or readers sharing this instance — are single-flighted: one
-  origin fetch, every waiter shares the ciphertext. Per-chunk tier
+  deduplicated chunk set and runs stage F then stage D. Origin fetches
+  are bounded by the optional ``concurrency`` (``BlockingLimiter``).
+  Concurrent requests for the same chunk *name* — a cache-miss stampede
+  across threads or readers sharing this instance — are single-flighted:
+  one origin fetch, every waiter shares the ciphertext. Per-chunk tier
   latencies still land in ``read_lat`` (the Fig 11 modes); the batch's
-  pipelined wall-clock model lands in ``batch_lat`` and ``last_batch``.
+  pipelined wall-clock model plus the fetch/decode wall split land in
+  ``batch_lat`` and ``last_batch``.
+* Staged (``fetch_ciphertexts`` + a ``BatchDecoder``): for callers that
+  want to overlap their own work between the stages or pick a decode
+  backend per call.
 
 ``origin_delay_s`` optionally injects a *real* sleep per origin fetch so
 benchmarks can demonstrate the serial-vs-pipelined wall-clock gap; it
@@ -32,7 +45,8 @@ defaults to 0 and never affects correctness.
 overlay at page granularity with a bitmap; base chunks stay immutable so
 every cache tier can share them across tenants/replicas. Reads assemble
 dirty pages from the overlay and fetch all clean spans through one
-``read_many`` batch.
+``read_many`` batch; a large unaligned write batches all of its
+read-modify-write base-page faults through one ``read_many`` too.
 """
 from __future__ import annotations
 
@@ -41,12 +55,13 @@ import heapq
 import itertools
 import threading
 import time
-import weakref
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from concurrent.futures import FIRST_COMPLETED, wait
 
 import numpy as np
 
+from repro.core.concurrency import LazyPool
 from repro.core.crypto import aes, convergent
+from repro.core.decode import BatchDecoder
 from repro.core.layout import ranges_to_chunks
 from repro.core.manifest import ZERO_CHUNK, Manifest
 from repro.core.telemetry import COUNTERS, LatencyRecorder
@@ -83,10 +98,28 @@ class _Flight:
         self.error = None
 
 
+class FetchedBatch:
+    """Output of the fetch-I/O stage (stage F), input to the decode
+    stage (stage D): ciphertexts + per-name simulated latencies, with
+    the index bookkeeping the decode stage needs to fan plaintexts back
+    out to chunk indices."""
+
+    __slots__ = ("by_name", "ciphertexts", "lats", "zero_indices",
+                 "l1_lat", "l1_hits")
+
+    def __init__(self):
+        self.by_name: dict[str, list[int]] = {}     # name -> chunk indices
+        self.ciphertexts: dict[str, bytes] = {}
+        self.lats: dict[str, float] = {}            # simulated fetch lat
+        self.zero_indices: list[int] = []
+        self.l1_lat = 0.0
+        self.l1_hits = 0
+
+
 class TieredReader:
     def __init__(self, manifest: Manifest, store, root: str | None = None,
                  l1=None, l2=None, concurrency=None,
-                 origin_delay_s: float = 0.0):
+                 origin_delay_s: float = 0.0, decoder: BatchDecoder | None = None):
         self.m = manifest
         self.store = store
         self.root = root or manifest.root_id
@@ -94,32 +127,16 @@ class TieredReader:
         self.l2 = l2
         self.concurrency = concurrency
         self.origin_delay_s = origin_delay_s
+        self.decoder = decoder if decoder is not None else BatchDecoder()
         self.read_lat = LatencyRecorder("e2e.read")
         self.batch_lat = LatencyRecorder("e2e.read_batch")
         self.last_batch: dict = {}
         self._refs = {c.index: c for c in manifest.chunks}
         self._flights: dict[str, _Flight] = {}
         self._flight_lock = threading.Lock()
-        self._pool: ThreadPoolExecutor | None = None
-        self._pool_size = 0
-        self._pool_lock = threading.Lock()
-
-    def _executor(self, workers: int) -> ThreadPoolExecutor:
-        """Long-lived fetch pool, grown on demand: spawning a pool per
-        batch would put thread start/join on the demand-paging hot path.
-        Never shrunk; per-call width is enforced by the caller.
-
-        A returned pool is NEVER shut down while the reader lives — a
-        concurrent wider batch may race this call's map() submission, so
-        growing abandons the smaller pool instead of shutting it down.
-        Every pool's shutdown is tied to the reader's lifetime via
-        weakref.finalize, so worker threads don't outlive the reader."""
-        with self._pool_lock:
-            if self._pool is None or self._pool_size < workers:
-                self._pool = ThreadPoolExecutor(max_workers=workers)
-                self._pool_size = workers
-                weakref.finalize(self, self._pool.shutdown, wait=False)
-            return self._pool
+        # long-lived fetch pool, grown on demand: spawning a pool per
+        # batch would put thread start/join on the demand-paging hot path
+        self._fetch_pool = LazyPool()
 
     # ------------------------------------------------------------- chunks
     def _fetch_cipher(self, ref) -> tuple[bytes, float]:
@@ -197,105 +214,241 @@ class TieredReader:
         self.read_lat.record(lat)
         return plain
 
-    def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
-                     materialize: bool = True) -> dict:
-        """Batched fetch: {index: plaintext} for a deduplicated chunk set.
+    # ------------------------------------------------- stage F: fetch I/O
+    def fetch_ciphertexts(self, indices,
+                          parallelism: int = DEFAULT_PARALLELISM) -> FetchedBatch:
+        """Fetch-I/O-only stage: pull every distinct chunk name of
+        `indices` into memory as CIPHERTEXT, nothing decrypted.
 
-        L1 is probed serially (a hit costs ~2us); every miss is fetched
-        through a `parallelism`-wide thread pool, one fetch per distinct
-        chunk name (batch-level dedup on top of cross-caller
-        single-flight). Origin fetches honor `self.concurrency`.
-
-        With ``materialize=False`` (the prefetch path) nothing is
-        decrypted or accumulated — tiers are warmed, the returned dict is
-        empty, and memory stays flat for arbitrarily large index sets.
-        """
-        t0 = time.perf_counter()
-        uniq = sorted(set(int(i) for i in indices))
-        cs = self.m.chunk_size
-        out: dict[int, bytes] = {}
-        l1_lat = 0.0
-        hit_plain: dict[str, bytes] = {}
-        by_name: dict[str, list[int]] = {}
-        for i in uniq:
+        Staged push through the tiers: L1 probed serially (a hit costs
+        ~2us); misses claim single-flight leadership; led names go
+        through one batched L2 fetch (stripe requests threaded per node
+        inside the cache) and the rest through a `parallelism`-wide
+        origin pool bounded by `self.concurrency`. Names led by another
+        thread (stampede) are waited on last, so their fetch overlaps
+        this call's own I/O."""
+        fb = FetchedBatch()
+        for i in sorted(set(int(i) for i in indices)):
             ref = self._refs[i]
             if ref.name == ZERO_CHUNK:
                 COUNTERS.inc("read.zero_chunks")
-                if materialize:
-                    out[i] = b"\x00" * cs
-                continue
-            if ref.name in hit_plain:
-                out[i] = hit_plain[ref.name]
-                continue
-            if self.l1 is not None and ref.name not in by_name:
-                ct = self.l1.get(ref.name)
-                l1_lat += L1_PROBE_S
-                if ct is not None:
-                    self.read_lat.record(L1_PROBE_S)
-                    if materialize:
-                        plain = convergent.decrypt_chunk(ct, ref.key,
-                                                         ref.sha256)
-                        hit_plain[ref.name] = plain
-                        out[i] = plain
-                    continue
-            by_name.setdefault(ref.name, []).append(i)
-
-        fetch_lats: list[float] = []
-        if by_name:
-            names = list(by_name)
-
-            # workers only do I/O (L2 / origin fetch): decrypt is pure CPU
-            # and runs serially in the caller — Python threads would just
-            # contend on the GIL over it
-            def fetch_one(name: str):
-                ct, lat = self._fetch_cipher(self._refs[by_name[name][0]])
-                return name, ct, lat
-
-            workers = max(1, min(int(parallelism), len(names)))
-            if workers == 1:
-                results = [fetch_one(n) for n in names]
+                fb.zero_indices.append(i)
             else:
-                # bounded submission: at most `workers` tasks in flight.
-                # The pool may be wider than this call's parallelism (it
-                # is shared across batches); submitting everything and
-                # gating with a semaphore would park surplus worker
-                # threads on the gate and starve concurrent batches.
-                pool = self._executor(workers)
-                results = []
-                name_iter = iter(names)
-                pending = {pool.submit(fetch_one, n)
-                           for n in itertools.islice(name_iter, workers)}
+                fb.by_name.setdefault(ref.name, []).append(i)
+        miss = []
+        for name in fb.by_name:
+            if self.l1 is not None:
+                ct = self.l1.get(name)
+                fb.l1_lat += L1_PROBE_S
+                if ct is not None:
+                    fb.ciphertexts[name] = ct
+                    fb.lats[name] = L1_PROBE_S
+                    fb.l1_hits += 1
+                    self.read_lat.record(L1_PROBE_S)
+                    continue
+            miss.append(name)
+        if not miss:
+            return fb
+        lead, follow = [], {}
+        with self._flight_lock:
+            for name in miss:
+                flight = self._flights.get(name)
+                if flight is None:
+                    flight = _Flight()
+                    self._flights[name] = flight
+                    lead.append((name, flight))
+                else:
+                    follow[name] = flight
+        if lead:
+            self._fetch_leaders(lead, parallelism, fb)
+        for name, flight in follow.items():
+            flight.event.wait()
+            COUNTERS.inc("read.singleflight_dedup")
+            if flight.error is not None:
+                raise flight.error
+            fb.ciphertexts[name] = flight.ciphertext
+            fb.lats[name] = flight.sim_lat
+            self.read_lat.record(flight.sim_lat)
+        return fb
+
+    def _resolve_flight(self, name: str, flight: _Flight, ct: bytes,
+                        lat: float, fb: FetchedBatch):
+        flight.ciphertext = ct
+        flight.sim_lat = lat
+        with self._flight_lock:
+            self._flights.pop(name, None)
+        flight.event.set()
+        fb.ciphertexts[name] = ct
+        fb.lats[name] = lat
+        self.read_lat.record(lat)
+
+    def _poison_flight(self, name: str, flight: _Flight, error: Exception):
+        flight.error = error
+        with self._flight_lock:
+            self._flights.pop(name, None)
+        flight.event.set()
+
+    def _fetch_leaders(self, lead: list, parallelism: int, fb: FetchedBatch):
+        """Push the names this call leads through the tier stages as
+        batches: L1 double-check -> one batched L2 fetch -> parallel
+        origin pool. Each name's flight resolves the moment its
+        ciphertext lands, so stampeding waiters never wait on the whole
+        batch."""
+        unresolved = dict(lead)
+        try:
+            pending: list[str] = []
+            for name, flight in lead:
+                ct = None
+                # leader double-check: a previous flight for this name may
+                # have backfilled L1 after this caller's probe missed
+                if self.l1 is not None:
+                    peek = getattr(self.l1, "peek", self.l1.get)
+                    ct = peek(name)
+                if ct is not None:
+                    self._resolve_flight(name, unresolved.pop(name), ct,
+                                         L1_PROBE_S, fb)
+                else:
+                    pending.append(name)
+            l2_lat: dict[str, float] = {}
+            if pending and self.l2 is not None:
+                cs = self.m.chunk_size
+                if hasattr(self.l2, "get_chunks"):
+                    res = self.l2.get_chunks(pending, cs)
+                else:
+                    res = {n: self.l2.get_chunk(n, cs) for n in pending}
+                still = []
+                for name in pending:
+                    lat, ct = res[name]
+                    if ct is not None:
+                        if self.l1 is not None:
+                            self.l1.put(name, ct)
+                        self._resolve_flight(name, unresolved.pop(name),
+                                             ct, lat, fb)
+                    else:
+                        l2_lat[name] = lat
+                        still.append(name)
+                pending = still
+            if pending:
+                self._origin_stage(pending, parallelism, l2_lat,
+                                   unresolved, fb)
+        except BaseException as e:          # propagate to waiters too;
+            # BaseException: a KeyboardInterrupt here must still resolve
+            # every claimed flight or stampeding waiters hang forever
+            # (the serial path gets this from its try/finally)
+            for name, flight in list(unresolved.items()):
+                self._poison_flight(name, unresolved.pop(name), e)
+            raise
+
+    def _origin_stage(self, pending: list, parallelism: int, l2_lat: dict,
+                      unresolved: dict, fb: FetchedBatch):
+        """Parallel origin fetch of `pending` names. Errors stay
+        per-name: a failed fetch poisons only ITS flight (exactly like
+        the serial ``_fetch_cipher``), in-flight siblings still resolve
+        for their waiters, and only never-started names inherit the
+        first error. Raises the first error after the stage drains."""
+        def fetch_origin(name: str):
+            limiter = self.concurrency if self.concurrency is not None \
+                else contextlib.nullcontext()
+            with limiter:
+                if self.origin_delay_s > 0:
+                    time.sleep(self.origin_delay_s)
+                ct = self.store.get_chunk(self.root, name)
+            COUNTERS.inc("read.origin_fetches")
+            if self.l2 is not None:
+                self.l2.put_chunk(name, ct)
+            if self.l1 is not None:
+                self.l1.put(name, ct)
+            return ct, l2_lat.get(name, 0.0) + ORIGIN_LAT_S
+
+        first_err = None
+        workers = max(1, min(int(parallelism), len(pending)))
+        name_iter = iter(pending)
+        if workers == 1:
+            for name in name_iter:
                 try:
-                    while pending:
-                        done, pending = wait(pending,
-                                             return_when=FIRST_COMPLETED)
-                        for fut in done:
-                            results.append(fut.result())
-                            nxt = next(name_iter, None)
-                            if nxt is not None:
-                                pending.add(pool.submit(fetch_one, nxt))
-                finally:
-                    for fut in pending:   # error mid-batch: stop submitting
-                        fut.cancel()
-            for name, ct, lat in results:
-                self.read_lat.record(lat)
-                fetch_lats.append(lat)
-                if materialize:
-                    ref = self._refs[by_name[name][0]]
-                    plain = convergent.decrypt_chunk(ct, ref.key, ref.sha256)
-                    for i in by_name[name]:
+                    ct, lat = fetch_origin(name)
+                except BaseException as e:
+                    self._poison_flight(name, unresolved.pop(name), e)
+                    first_err = e
+                    break
+                self._resolve_flight(name, unresolved.pop(name), ct, lat, fb)
+        else:
+            # bounded submission: at most `workers` tasks in flight. The
+            # pool may be wider than this call's parallelism (it is
+            # shared across batches); submitting everything and gating
+            # with a semaphore would park surplus worker threads on the
+            # gate and starve concurrent batches.
+            pool = self._fetch_pool.get(workers)
+            fut_name = {pool.submit(fetch_origin, n): n
+                        for n in itertools.islice(name_iter, workers)}
+            while fut_name:
+                done, _ = wait(fut_name, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    name = fut_name.pop(fut)
+                    try:
+                        ct, lat = fut.result()
+                    except BaseException as e:
+                        self._poison_flight(name, unresolved.pop(name), e)
+                        if first_err is None:
+                            first_err = e     # stop submitting new names
+                        continue
+                    self._resolve_flight(name, unresolved.pop(name),
+                                         ct, lat, fb)
+                    if first_err is None:
+                        nxt = next(name_iter, None)
+                        if nxt is not None:
+                            fut_name[pool.submit(fetch_origin, nxt)] = nxt
+        if first_err is not None:
+            for name in name_iter:            # never-started names
+                self._poison_flight(name, unresolved.pop(name), first_err)
+            raise first_err
+
+    # ------------------------------------------------- stage F + stage D
+    def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
+                     materialize: bool = True) -> dict:
+        """Batched read: {index: plaintext} for a deduplicated chunk set
+        — ``fetch_ciphertexts`` (stage F) then one batched decode
+        (stage D) on the caller thread via ``self.decoder``.
+
+        With ``materialize=False`` (the prefetch path) the decode stage
+        is skipped entirely — tiers are warmed, the returned dict is
+        empty, and memory stays flat for arbitrarily large index sets.
+        """
+        t0 = time.perf_counter()
+        fb = self.fetch_ciphertexts(indices, parallelism)
+        fetch_wall = time.perf_counter() - t0
+        out: dict[int, bytes] = {}
+        decode_wall = 0.0
+        if materialize:
+            if fb.zero_indices:
+                zero = b"\x00" * self.m.chunk_size
+                for i in fb.zero_indices:
+                    out[i] = zero
+            if fb.by_name:
+                refs = [self._refs[idxs[0]] for idxs in fb.by_name.values()]
+                plains, decode_wall = self.decoder.decrypt_batch_timed(
+                    refs, fb.ciphertexts)
+                for name, idxs in fb.by_name.items():
+                    plain = plains[name]
+                    for i in idxs:
                         out[i] = plain
 
-        sim_wall = l1_lat + pipelined_latency(fetch_lats, parallelism)
+        fetch_lats = [lat for name, lat in fb.lats.items()
+                      if lat > L1_PROBE_S]
+        sim_wall = fb.l1_lat + pipelined_latency(fetch_lats, parallelism)
         self.batch_lat.record(sim_wall)
-        COUNTERS.add("read.batched_chunks", len(uniq))
+        nchunks = len(fb.zero_indices) + sum(len(v) for v in fb.by_name.values())
+        COUNTERS.add("read.batched_chunks", nchunks)
         self.last_batch = {
-            "chunks": len(uniq),
-            "fetched": len(by_name),
+            "chunks": nchunks,
+            "fetched": len(fb.by_name) - fb.l1_hits,
             "parallelism": int(parallelism),
-            "sim_serial_s": l1_lat + sum(fetch_lats),
+            "sim_serial_s": fb.l1_lat + sum(fetch_lats),
             "sim_pipelined_s": sim_wall,
             "wall_s": time.perf_counter() - t0,
+            "fetch_wall_s": fetch_wall,
+            "decode_wall_s": decode_wall,
+            "decode_backend": self.decoder.backend,
         }
         return out
 
@@ -360,12 +513,6 @@ class CowBlockDevice:
         iv = page.to_bytes(16, "big")
         return aes.ctr_decrypt(self._overlay[page], self.key, iv16=iv)
 
-    def _base_page(self, page: int) -> bytes:
-        off = page * PAGE
-        ln = min(PAGE, self.size - off)
-        data = self.reader.read(off, ln)
-        return data.ljust(PAGE, b"\x00")
-
     def _clean_spans(self, offset: int, end: int) -> list:
         """Maximal contiguous non-overlay byte runs within [offset, end)."""
         spans: list[list[int]] = []
@@ -412,9 +559,38 @@ class CowBlockDevice:
                 pos += len(span)
         return bytes(out)
 
-    def write(self, offset: int, data: bytes):
+    def _base_pages_batched(self, pages: list,
+                            parallelism: int = DEFAULT_PARALLELISM) -> dict:
+        """{page: PAGE bytes} of base-image content for `pages`, all
+        fetched through ONE ``read_many`` batch (pages past the image
+        end read as zeros)."""
+        capped = [(p, min(PAGE, self.size - p * PAGE)) for p in pages]
+        ranges = [(p * PAGE, ln) for p, ln in capped if ln > 0]
+        bufs = iter(self.reader.read_many(ranges, parallelism)) if ranges \
+            else iter(())
+        return {p: (next(bufs).ljust(PAGE, b"\x00") if ln > 0
+                    else b"\x00" * PAGE)
+                for p, ln in capped}
+
+    def write(self, offset: int, data: bytes,
+              parallelism: int = DEFAULT_PARALLELISM):
         pos, end = offset, offset + len(data)
-        src = 0
+        # a large unaligned write faults at most its two edge pages plus
+        # any interior page it only partially covers (none, by
+        # construction); batch every base-page fault through one
+        # read_many instead of serial read-modify-write per page
+        need_base = []
+        while pos < end:
+            page = pos // PAGE
+            within = pos % PAGE
+            take = min(PAGE - within, end - pos)
+            partial = not (within == 0 and take == PAGE)
+            if partial and not (page < self.npages and self.bitmap[page]):
+                need_base.append(page)
+            pos += take
+        base_pages = self._base_pages_batched(need_base, parallelism) \
+            if need_base else {}
+        pos, src = offset, 0
         while pos < end:
             page = pos // PAGE
             within = pos % PAGE
@@ -424,7 +600,7 @@ class CowBlockDevice:
             else:
                 # read-modify-write (paper: page-granularity bitmap)
                 base = self._load_page(page) if self.bitmap[page] \
-                    else self._base_page(page)
+                    else base_pages[page]
                 pagebuf = base[:within] + data[src:src + take] + base[within + take:]
             self._store_page(page, pagebuf)
             pos += take

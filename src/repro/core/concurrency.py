@@ -7,8 +7,35 @@ spiral)."""
 from __future__ import annotations
 
 import threading
+import weakref
+from concurrent.futures import ThreadPoolExecutor
 
 from repro.core.telemetry import COUNTERS
+
+
+class LazyPool:
+    """Lazily-created ThreadPoolExecutor, grown on demand, never shrunk
+    — the shared pool idiom of the fetch/decode/stripe stages.
+
+    ``get(workers)`` returns a pool at least `workers` wide. Growing
+    ABANDONS the narrower pool instead of shutting it down: a concurrent
+    narrower batch may be racing its submissions against the growth.
+    Every created pool's shutdown is tied to this object's lifetime via
+    ``weakref.finalize``, so worker threads don't outlive the owner
+    holding the LazyPool."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+        self._size = 0
+
+    def get(self, workers: int) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None or self._size < workers:
+                self._pool = ThreadPoolExecutor(max_workers=workers)
+                self._size = workers
+                weakref.finalize(self, self._pool.shutdown, wait=False)
+            return self._pool
 
 
 class RejectingLimiter:

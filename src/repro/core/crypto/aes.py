@@ -87,13 +87,21 @@ def expand_key(key: bytes) -> np.ndarray:
 
 
 def encrypt_blocks(blocks: np.ndarray, round_keys: np.ndarray) -> np.ndarray:
-    """Encrypt N AES blocks at once. blocks: (N, 16) uint8 -> (N, 16) uint8."""
+    """Encrypt N AES blocks at once. blocks: (N, 16) uint8 -> (N, 16) uint8.
+
+    ``round_keys`` is either (rounds+1, 4) — one key schedule for every
+    block — or (N, rounds+1, 4) — per-block schedules, which is what lets
+    ``ctr_keystream_many`` run N differently-keyed chunks through a single
+    T-table pass (the round-key XOR broadcasts per row; the table gathers
+    are key-independent)."""
     n = blocks.shape[0]
+    per_block = round_keys.ndim == 3
+    rk = (lambda r: round_keys[:, r]) if per_block else (lambda r: round_keys[r])
     # to (N,4) big-endian uint32 columns
     s = blocks.reshape(n, 4, 4).astype(np.uint32)
     cols = (s[:, :, 0] << 24) | (s[:, :, 1] << 16) | (s[:, :, 2] << 8) | s[:, :, 3]
-    cols ^= round_keys[0]
-    rounds = round_keys.shape[0] - 1
+    cols = cols ^ rk(0)
+    rounds = round_keys.shape[-2] - 1
     for r in range(1, rounds):
         b0 = (cols >> 24) & 0xFF
         b1 = (cols >> 16) & 0xFF
@@ -102,7 +110,7 @@ def encrypt_blocks(blocks: np.ndarray, round_keys: np.ndarray) -> np.ndarray:
         j = np.arange(4)
         cols = (_T0[b0[:, j]] ^ _T1[b1[:, (j + 1) % 4]]
                 ^ _T2[b2[:, (j + 2) % 4]] ^ _T3[b3[:, (j + 3) % 4]]
-                ^ round_keys[r])
+                ^ rk(r))
     # final round: SubBytes + ShiftRows, no MixColumns
     b0 = _SBOX[(cols >> 24) & 0xFF].astype(np.uint32)
     b1 = _SBOX[(cols >> 16) & 0xFF].astype(np.uint32)
@@ -110,7 +118,7 @@ def encrypt_blocks(blocks: np.ndarray, round_keys: np.ndarray) -> np.ndarray:
     b3 = _SBOX[cols & 0xFF].astype(np.uint32)
     j = np.arange(4)
     cols = ((b0[:, j] << 24) | (b1[:, (j + 1) % 4] << 16)
-            | (b2[:, (j + 2) % 4] << 8) | b3[:, (j + 3) % 4]) ^ round_keys[rounds]
+            | (b2[:, (j + 2) % 4] << 8) | b3[:, (j + 3) % 4]) ^ rk(rounds)
     out = np.empty((n, 4, 4), dtype=np.uint8)
     out[:, :, 0] = (cols >> 24) & 0xFF
     out[:, :, 1] = (cols >> 16) & 0xFF
@@ -158,6 +166,84 @@ def ctr_encrypt(data: bytes, key: bytes, iv16: bytes = b"\x00" * 16) -> bytes:
 
 
 ctr_decrypt = ctr_encrypt
+
+
+def _counter_blocks(iv16: bytes, nblocks: int, out: np.ndarray):
+    """Fill ``out`` (nblocks, 16) with successive CTR blocks from iv16."""
+    base = int.from_bytes(iv16, "big")
+    lo = base & 0xFFFFFFFFFFFFFFFF
+    hi = base >> 64
+    if lo + nblocks <= 0xFFFFFFFFFFFFFFFF:
+        lo_vals = lo + np.arange(nblocks, dtype=np.uint64)
+        out[:, 8:] = lo_vals.astype(">u8").view(np.uint8).reshape(nblocks, 8)
+        out[:, :8] = np.frombuffer(hi.to_bytes(8, "big"), np.uint8)
+    else:
+        for i in range(nblocks):
+            out[i] = np.frombuffer(
+                ((base + i) % (1 << 128)).to_bytes(16, "big"), np.uint8)
+
+
+def ctr_keystream_many(keys: list, nbytes: list, ivs: list | None = None,
+                       *, encrypt_many=None) -> list:
+    """Keystreams for N independently-keyed CTR streams in ONE batched
+    T-table pass: every chunk's counter blocks are stacked into a single
+    (sum(blocks), 16) array, round keys are repeated per chunk into a
+    (sum(blocks), rounds+1, 4) schedule, and one ``encrypt_blocks`` call
+    produces all keystreams. This is the decode-stage hot path: per-call
+    numpy dispatch overhead amortizes over the whole batch instead of
+    being paid once per chunk (the GIL-thrash the ROADMAP called out).
+
+    keys: per-stream AES keys (all the same length — one rounds count).
+    nbytes: per-stream keystream length in bytes.
+    ivs: per-stream 16-byte initial counter blocks (default all-zero).
+    encrypt_many: optional drop-in for the (blocks, per-block round keys)
+    -> blocks core — the ``repro.kernels.aes`` jax variant plugs in here.
+
+    Returns a list of (nbytes[i],) uint8 keystream arrays.
+    """
+    n = len(keys)
+    if n == 0:
+        return []
+    assert len(set(len(k) for k in keys)) == 1, "one key size per batch"
+    if ivs is None:
+        ivs = [b"\x00" * 16] * n
+    nblocks = [(b + 15) // 16 for b in nbytes]
+    total = int(sum(nblocks))
+    if total == 0:
+        return [np.empty(0, np.uint8) for _ in range(n)]
+    ctr = np.zeros((total, 16), dtype=np.uint8)
+    off = 0
+    for iv, nb in zip(ivs, nblocks):
+        if nb:
+            _counter_blocks(iv, nb, ctr[off:off + nb])
+        off += nb
+    # distinct chunks usually have distinct convergent keys, but dedup the
+    # (pure-python) expansion anyway for the identical-plaintext case
+    expanded: dict[bytes, np.ndarray] = {}
+    per_key = []
+    for k in keys:
+        rk = expanded.get(k)
+        if rk is None:
+            rk = expanded[k] = expand_key(k)
+        per_key.append(rk)
+    rks = np.repeat(np.stack(per_key), nblocks, axis=0)
+    fn = encrypt_many or encrypt_blocks
+    ks = np.asarray(fn(ctr, rks)).reshape(total * 16)
+    out = []
+    off = 0
+    for nb, want in zip(nblocks, nbytes):
+        out.append(ks[off * 16:off * 16 + want])
+        off += nb
+    return out
+
+
+def ctr_decrypt_many(datas: list, keys: list, ivs: list | None = None,
+                     *, encrypt_many=None) -> list:
+    """Batched AES-CTR over N buffers (encryption == decryption)."""
+    ks = ctr_keystream_many(keys, [len(d) for d in datas], ivs,
+                            encrypt_many=encrypt_many)
+    return [(np.frombuffer(d, np.uint8) ^ k).tobytes()
+            for d, k in zip(datas, ks)]
 
 
 # ------------------------------------------------------------------- GCM

@@ -16,6 +16,7 @@ import hashlib
 from dataclasses import dataclass
 
 from repro.core.crypto import aes
+from repro.core.crypto.sha256v import sha256_many
 
 
 def derive_key(plaintext: bytes, salt: bytes) -> bytes:
@@ -43,14 +44,45 @@ def encrypt_chunk(plaintext: bytes, salt: bytes) -> EncryptedChunk:
 
 
 def decrypt_chunk(ciphertext: bytes, key: bytes, expect_sha256: bytes) -> bytes:
-    """Verify-then-decrypt; workers reject modified ciphertexts (§3.1)."""
+    """Verify-then-decrypt; workers reject modified ciphertexts (§3.1).
+
+    One chunk at a time — the serial reference path and the oracle for
+    ``decrypt_chunks``."""
     if hashlib.sha256(ciphertext).digest() != expect_sha256:
         raise IntegrityError("chunk ciphertext hash mismatch")
     return aes.ctr_decrypt(ciphertext, key)
 
 
+def decrypt_chunks(ciphertexts: list, keys: list, expect_sha256s: list, *,
+                   sha_backend: str = "hashlib", encrypt_many=None) -> list:
+    """Batched verify-then-decrypt of N chunks.
+
+    Verification is one batched SHA pass over all ciphertexts
+    (``sha256v.sha256_many``; ``sha_backend="numpy"`` selects the
+    vectorized lockstep implementation), decryption is one batched
+    T-table pass (``aes.ctr_keystream_many``; ``encrypt_many`` plugs in
+    the ``repro.kernels.aes`` jax variant). Integrity stays per-chunk: a
+    single tampered ciphertext raises ``IntegrityError`` naming every
+    offending batch position — no plaintext of a bad chunk is ever
+    produced, and verification completes for the whole batch before any
+    keystream is generated (verify-THEN-decrypt, batch-wide)."""
+    digests = sha256_many(list(ciphertexts), backend=sha_backend)
+    bad = [i for i, (got, want) in enumerate(zip(digests, expect_sha256s))
+           if got != want]
+    if bad:
+        raise IntegrityError(
+            f"chunk ciphertext hash mismatch at batch positions {bad}",
+            bad)
+    return aes.ctr_decrypt_many(list(ciphertexts), list(keys),
+                                encrypt_many=encrypt_many)
+
+
 class IntegrityError(Exception):
-    pass
+    """args[1], when present, lists the offending batch positions."""
+
+    @property
+    def bad_positions(self) -> list:
+        return list(self.args[1]) if len(self.args) > 1 else []
 
 
 def make_salt(epoch: int, root_id: str, placement: str = "") -> bytes:

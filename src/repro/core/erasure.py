@@ -110,13 +110,18 @@ def encode_matrix(k: int, n: int) -> np.ndarray:
 
 
 class ErasureCoder:
-    def __init__(self, k: int = 4, n: int = 5, parity_fn=None):
+    def __init__(self, k: int = 4, n: int = 5, parity_fn=None,
+                 matmul_fn=None):
         assert 1 <= k < n <= 255
         self.k, self.n = k, n
         self.matrix = encode_matrix(k, n)
         # n-k == 1 parity row is all-ones -> pure XOR (paper's hot loop);
         # parity_fn lets the Pallas kernel take over that computation.
         self.parity_fn = parity_fn
+        # matmul_fn(matrix, (k, L) data) -> (r, L): decode-side GF matmul
+        # override (``repro.kernels.gf256.ops.rs_matmul_fn``) used by the
+        # batched ``decode_many`` reconstruction.
+        self.matmul_fn = matmul_fn
 
     def stripe_len(self, chunk_len: int) -> int:
         return (chunk_len + self.k - 1) // self.k
@@ -154,3 +159,43 @@ class ErasureCoder:
             got = np.stack([np.frombuffer(stripes[i], np.uint8) for i in idx])
             data = gf_matmul(inv, got)
         return data.reshape(-1)[:chunk_len].tobytes()
+
+    def decode_many(self, stripes_list: list, chunk_lens: list) -> list:
+        """Batched decode: reconstruct N chunks' stripes in one GF matmul
+        per distinct (surviving-stripe signature, stripe length) group.
+
+        Chunks sharing a signature — by far the common case: either all k
+        data stripes arrived, or the same node is slow/failed across the
+        batch — are concatenated along the length axis so the whole
+        group's reconstruction is ONE ``gf_matmul`` (or ``matmul_fn``,
+        the Pallas kernel) call instead of one per chunk. The all-data
+        signature needs no math at all. Byte-identical to calling
+        ``decode`` per chunk (the oracle)."""
+        groups: dict[tuple, list[int]] = {}
+        for pos, (stripes, clen) in enumerate(zip(stripes_list, chunk_lens)):
+            if len(stripes) < self.k:
+                raise ValueError(
+                    f"need {self.k} stripes, got {len(stripes)} "
+                    f"(batch position {pos})")
+            idx = tuple(sorted(stripes)[: self.k])
+            groups.setdefault((idx, self.stripe_len(clen)), []).append(pos)
+        out: list[bytes | None] = [None] * len(stripes_list)
+        ident = tuple(range(self.k))
+        for (idx, L), members in groups.items():
+            if idx == ident:
+                for pos in members:
+                    s = stripes_list[pos]
+                    out[pos] = b"".join(s[i] for i in idx)[:chunk_lens[pos]]
+                continue
+            # (k, len(members)*L): one matmul reconstructs the whole group
+            got = np.stack([
+                np.frombuffer(b"".join(stripes_list[pos][i]
+                                       for pos in members), np.uint8)
+                for i in idx])
+            inv = _gf_matinv(self.matrix[list(idx)])
+            mm = self.matmul_fn if self.matmul_fn is not None else gf_matmul
+            data = np.asarray(mm(inv, got), np.uint8)
+            for j, pos in enumerate(members):
+                chunk = data[:, j * L:(j + 1) * L]
+                out[pos] = chunk.reshape(-1)[:chunk_lens[pos]].tobytes()
+        return out

@@ -11,10 +11,12 @@ parameter shards (the paper's *sparsity* property mapped to SPMD shards).
 Restore is *batched by default*: ``restore_tree`` / ``restore_shards`` /
 ``tensor_shard`` compute every byte range they need up front and hand the
 whole set to ``TieredReader.read_many``, which coalesces the ranges into
-one deduplicated chunk set and fetches all misses through a parallel,
-single-flighted pipeline — cold-start wall clock scales with the deepest
-miss, not the sum of misses (paper §2.2). Pass ``batched=False`` (or use
-``tensor``) for the serial reference path.
+one deduplicated chunk set and runs the staged fetch/decode pipeline —
+all misses fetched through a parallel, single-flighted I/O stage, then
+every ciphertext decrypted+verified in one batched decode pass
+(``core.decode``) — so cold-start wall clock scales with the deepest
+miss plus one dense decode, not the sum of per-chunk costs (paper §2.2).
+Pass ``batched=False`` (or use ``tensor``) for the serial reference path.
 """
 from __future__ import annotations
 
@@ -110,16 +112,19 @@ class ImageReader:
 
     def __init__(self, manifest_blob: bytes, tenant_key: bytes, store,
                  l1=None, l2=None, concurrency=None, root: str | None = None,
-                 origin_delay_s: float = 0.0):
+                 origin_delay_s: float = 0.0, decoder=None):
         # `root` = the root the manifest was FETCHED from; after GC
         # migration this differs from manifest.root_id (which names the
         # root the image was created in and is baked into the salt).
+        # `decoder` selects the batch-decode backend
+        # (``core.decode.BatchDecoder``; "serial" is the per-chunk oracle).
         self.manifest = open_manifest(manifest_blob, tenant_key)
         self.layout = ImageLayout.from_table(self.manifest.layout_table,
                                              self.manifest.chunk_size)
         self.reader = TieredReader(self.manifest, store, root=root,
                                    l1=l1, l2=l2, concurrency=concurrency,
-                                   origin_delay_s=origin_delay_s)
+                                   origin_delay_s=origin_delay_s,
+                                   decoder=decoder)
 
     def tensor(self, name: str) -> np.ndarray:
         """Serial restore of one tensor (the reference read path)."""

@@ -1,0 +1,3 @@
+from repro.kernels.aes.ops import ctr_keystream_many_jax, encrypt_many_jax
+
+__all__ = ["ctr_keystream_many_jax", "encrypt_many_jax"]

@@ -1,0 +1,73 @@
+"""jax/XLA variant of the batched T-table AES pass.
+
+The decode stage's AES core is (total_blocks, 4) uint32 columns through
+R rounds of table gathers + per-block round-key XORs. This mirrors
+``repro.core.crypto.aes.encrypt_blocks`` op-for-op in jnp so one jit'd
+call encrypts every chunk's counter blocks at once, with per-block round
+keys (each chunk has its own convergent key).
+
+Why XLA and not a hand-tiled Pallas kernel: the hot op is a 256-entry
+uint32 gather per state byte, and the TPU VPU has no efficient byte
+gather (same constraint that shaped ``kernels/gf256`` around packed
+xtime chains). A gather-free TPU AES needs bitslicing — the S-box as a
+~120-gate boolean circuit over 128-lane bit planes — which is a kernel
+project of its own; until then XLA's native gather is the right lowering
+on CPU/GPU and this module is the drop-in seam for it
+(``aes.ctr_keystream_many(encrypt_many=...)``).
+
+Shapes are bucketed by the caller (``ops.encrypt_many_jax``) so jit
+retraces O(log(batch)) times, not per batch size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crypto.aes import _SBOX, _T0, _T1, _T2, _T3
+
+_ROLL1 = (1, 2, 3, 0)
+_ROLL2 = (2, 3, 0, 1)
+_ROLL3 = (3, 0, 1, 2)
+
+
+@jax.jit
+def encrypt_blocks_cols(cols: jax.Array, rks: jax.Array) -> jax.Array:
+    """cols: (N, 4) uint32 state columns; rks: (N, rounds+1, 4) uint32.
+    Returns (N, 4) uint32 encrypted columns."""
+    t0 = jnp.asarray(_T0)
+    t1 = jnp.asarray(_T1)
+    t2 = jnp.asarray(_T2)
+    t3 = jnp.asarray(_T3)
+    sbox = jnp.asarray(_SBOX)
+    rounds = rks.shape[1] - 1
+    cols = cols ^ rks[:, 0]
+    for r in range(1, rounds):
+        b0 = (cols >> 24) & 0xFF
+        b1 = (cols >> 16) & 0xFF
+        b2 = (cols >> 8) & 0xFF
+        b3 = cols & 0xFF
+        cols = (t0[b0] ^ t1[b1[:, _ROLL1]] ^ t2[b2[:, _ROLL2]]
+                ^ t3[b3[:, _ROLL3]] ^ rks[:, r])
+    b0 = sbox[(cols >> 24) & 0xFF].astype(jnp.uint32)
+    b1 = sbox[(cols >> 16) & 0xFF].astype(jnp.uint32)
+    b2 = sbox[(cols >> 8) & 0xFF].astype(jnp.uint32)
+    b3 = sbox[cols & 0xFF].astype(jnp.uint32)
+    cols = ((b0 << 24) | (b1[:, _ROLL1] << 16)
+            | (b2[:, _ROLL2] << 8) | b3[:, _ROLL3]) ^ rks[:, rounds]
+    return cols
+
+
+@jax.jit
+def pack_cols(blocks_u8: jax.Array) -> jax.Array:
+    """(N, 16) uint8 -> (N, 4) uint32 big-endian columns."""
+    s = blocks_u8.reshape(-1, 4, 4).astype(jnp.uint32)
+    return (s[:, :, 0] << 24) | (s[:, :, 1] << 16) | (s[:, :, 2] << 8) | s[:, :, 3]
+
+
+@jax.jit
+def unpack_cols(cols: jax.Array) -> jax.Array:
+    """(N, 4) uint32 -> (N, 16) uint8."""
+    n = cols.shape[0]
+    out = jnp.stack([(cols >> 24) & 0xFF, (cols >> 16) & 0xFF,
+                     (cols >> 8) & 0xFF, cols & 0xFF], axis=-1)
+    return out.astype(jnp.uint8).reshape(n, 16)

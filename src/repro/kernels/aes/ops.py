@@ -1,0 +1,47 @@
+"""numpy-facing adapters for the jax batched-AES pass.
+
+``encrypt_many_jax`` is a drop-in for the ``encrypt_many`` hook of
+``aes.ctr_keystream_many`` (and so of ``convergent.decrypt_chunks`` /
+``core.decode.BatchDecoder(backend="jax")``): same (blocks, per-block
+round keys) -> blocks contract as the numpy core, byte-identical output.
+Batch sizes are padded up to power-of-two buckets so jit compiles once
+per bucket, not once per distinct chunk count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.aes import aesjax
+
+_MIN_BUCKET = 256
+
+
+def _bucket(n: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b <<= 1
+    return b
+
+
+def encrypt_many_jax(blocks_u8: np.ndarray, rks: np.ndarray) -> np.ndarray:
+    """(N, 16) uint8 AES blocks + (N, rounds+1, 4) uint32 per-block round
+    keys -> (N, 16) uint8, through one jit'd T-table pass."""
+    n = blocks_u8.shape[0]
+    pad = _bucket(n) - n
+    if pad:
+        # edge-repeat so padded lanes run a well-defined (discarded) block
+        blocks_u8 = np.concatenate(
+            [blocks_u8, np.repeat(blocks_u8[-1:], pad, axis=0)])
+        rks = np.concatenate([rks, np.repeat(rks[-1:], pad, axis=0)])
+    cols = aesjax.pack_cols(blocks_u8)
+    out = aesjax.unpack_cols(aesjax.encrypt_blocks_cols(cols, rks))
+    return np.asarray(out)[:n]
+
+
+def ctr_keystream_many_jax(keys: list, nbytes: list,
+                           ivs: list | None = None) -> list:
+    """``aes.ctr_keystream_many`` behind the same interface, with the
+    block pass on the jax backend."""
+    from repro.core.crypto import aes
+    return aes.ctr_keystream_many(keys, nbytes, ivs,
+                                  encrypt_many=encrypt_many_jax)

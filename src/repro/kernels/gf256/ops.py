@@ -7,16 +7,29 @@ from repro.kernels.gf256.gf256 import rs_encode_pallas
 from repro.kernels.parity.ops import pack_stripes
 
 
-def rs_parity_fn(matrix_parity_rows: np.ndarray, interpret: bool = True):
-    """Adapter producing (r, L) uint8 parity from (k, L) uint8 data using
-    the Pallas kernel; matrix rows are the bottom (n-k) of the encode
-    matrix from ``core.erasure.encode_matrix``."""
-    coeffs = tuple(tuple(int(c) for c in row) for row in matrix_parity_rows)
-
-    def fn(data_u8: np.ndarray) -> np.ndarray:
+def rs_matmul_fn(interpret: bool = True):
+    """Adapter matching ``ErasureCoder(matmul_fn=...)``: (r, k) GF matrix
+    x (k, L) uint8 stripes -> (r, L) uint8, through the packed-xtime
+    Pallas kernel. Used by the batched ``decode_many`` reconstruction —
+    the matrix is the inverse of the surviving-stripe rows, so each
+    distinct erasure signature jit-caches one unrolled kernel."""
+    def fn(matrix: np.ndarray, data_u8: np.ndarray) -> np.ndarray:
+        coeffs = tuple(tuple(int(c) for c in row) for row in np.asarray(matrix))
         L = data_u8.shape[1]
         packed = pack_stripes(np.asarray(data_u8, np.uint8))
         out = np.asarray(rs_encode_pallas(packed, coeffs, interpret=interpret))
         return out.view(np.int32).reshape(len(coeffs), -1, 1) \
                   .view(np.uint8).reshape(len(coeffs), -1)[:, :L]
+    return fn
+
+
+def rs_parity_fn(matrix_parity_rows: np.ndarray, interpret: bool = True):
+    """Adapter producing (r, L) uint8 parity from (k, L) uint8 data using
+    the Pallas kernel; matrix rows are the bottom (n-k) of the encode
+    matrix from ``core.erasure.encode_matrix``. Same pack/kernel/unpack
+    path as ``rs_matmul_fn``, with the matrix bound up front."""
+    matmul = rs_matmul_fn(interpret=interpret)
+
+    def fn(data_u8: np.ndarray) -> np.ndarray:
+        return matmul(matrix_parity_rows, data_u8)
     return fn

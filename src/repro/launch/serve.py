@@ -23,6 +23,18 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--max-coldstarts", type=int, default=4,
+                    help="admission control: concurrent cold starts this "
+                         "replica accepts before REJECTING (RejectingLimiter, "
+                         "paper §4.2)")
+    ap.add_argument("--fetch-concurrency", type=int, default=16,
+                    help="bound on concurrent origin chunk fetches across "
+                         "all restores (BlockingLimiter); 0 = unbounded")
+    ap.add_argument("--parallelism", type=int, default=8,
+                    help="per-restore fetch pipeline width")
+    ap.add_argument("--decode-backend", default="numpy",
+                    choices=["numpy", "jax", "serial"],
+                    help="post-fetch batch decode backend")
     args = ap.parse_args()
 
     import jax
@@ -30,7 +42,8 @@ def main():
     from repro.configs import get_config
     from repro.core.cache.distributed import DistributedCache
     from repro.core.cache.local import LocalCache
-    from repro.core.concurrency import RejectingLimiter
+    from repro.core.concurrency import BlockingLimiter, RejectingLimiter
+    from repro.core.decode import BatchDecoder
     from repro.core.gc import GenerationalGC
     from repro.core.loader import create_image
     from repro.core.store import ChunkStore
@@ -60,13 +73,24 @@ def main():
 
     l1 = LocalCache(256 << 20)
     l2 = DistributedCache(num_nodes=6, seed=0)
+    # both serving-replica bounds come from config: admission control
+    # (reject excess cold starts) and fetch concurrency (block excess
+    # origin reads) are separate knobs (§4.2)
+    limiter = RejectingLimiter(args.max_coldstarts)
+    fetch_limiter = BlockingLimiter(args.fetch_concurrency) \
+        if args.fetch_concurrency > 0 else None
     t0 = time.time()
     engine, stats = cold_start(model, blob, key, store, l1=l1, l2=l2,
-                               root=root, limiter=RejectingLimiter(4),
+                               root=root, limiter=limiter,
+                               fetch_limiter=fetch_limiter,
+                               parallelism=args.parallelism,
+                               decoder=BatchDecoder(args.decode_backend),
                                max_batch=4, max_len=64)
     print(f"cold start {time.time()-t0:.2f}s "
           f"(load {stats['load_seconds']:.2f}s, "
-          f"origin fetches {stats['origin_fetches']:.0f})")
+          f"origin fetches {stats['origin_fetches']:.0f}, "
+          f"fetch {stats['fetch_wall_s']:.2f}s + "
+          f"decode[{stats['decode_backend']}] {stats['decode_wall_s']:.2f}s)")
 
     reqs = [Request(i, prompt=[1 + i, 2, 3], max_new=args.max_new)
             for i in range(args.requests)]

@@ -23,13 +23,15 @@ from repro.train.checkpoint import tree_from_flat
 def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
                l1=None, l2=None, root=None, max_batch=4, max_len=128,
                limiter=None, fetch_limiter=None, parallelism=DEFAULT_PARALLELISM,
-               batched=True) -> tuple:
+               batched=True, decoder=None) -> tuple:
     """Returns (engine, stats).
 
-    The restore goes through the batched read path (`parallelism`-wide
-    origin pipeline, optionally bounded by `fetch_limiter`, a
-    BlockingLimiter); `batched=False` keeps the serial chunk loop for
-    comparison. `limiter` is the admission-control RejectingLimiter."""
+    The restore goes through the staged fetch/decode read path
+    (`parallelism`-wide origin pipeline, optionally bounded by
+    `fetch_limiter`, a BlockingLimiter; post-fetch decrypt+verify as one
+    batched decode whose backend `decoder` selects); `batched=False`
+    keeps the serial chunk loop for comparison. `limiter` is the
+    admission-control RejectingLimiter."""
     if limiter is not None and not limiter.try_acquire():
         COUNTERS.inc("serve.coldstart_rejected")
         raise RuntimeError("cold-start rejected: concurrency limit")
@@ -37,7 +39,8 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
         t0 = time.time()
         before_origin = COUNTERS.get("read.origin_fetches")
         reader = ImageReader(manifest_blob, tenant_key, store, l1=l1, l2=l2,
-                             root=root, concurrency=fetch_limiter)
+                             root=root, concurrency=fetch_limiter,
+                             decoder=decoder)
         template = model.param_shapes()
         flat = reader.restore_tree(batched=batched, parallelism=parallelism)
         params = tree_from_flat(template, flat)
@@ -45,13 +48,18 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
             lambda p: p.astype(np.float32) if p.dtype == np.float64 else p, params)
         t_load = time.time() - t0
         engine = ServeEngine(model, params, max_batch=max_batch, max_len=max_len)
+        lb = reader.reader.last_batch
         stats = {
             "load_seconds": t_load,
             "origin_fetches": COUNTERS.get("read.origin_fetches") - before_origin,
             "image_bytes": reader.layout.image_size,
             "l2_sim_latency_p50": reader.reader.read_lat.percentile(50),
-            "sim_pipelined_s": reader.reader.last_batch.get("sim_pipelined_s"),
-            "sim_serial_s": reader.reader.last_batch.get("sim_serial_s"),
+            "sim_pipelined_s": lb.get("sim_pipelined_s"),
+            "sim_serial_s": lb.get("sim_serial_s"),
+            # staged-pipeline split: I/O wall vs the one batched decode
+            "fetch_wall_s": lb.get("fetch_wall_s"),
+            "decode_wall_s": lb.get("decode_wall_s"),
+            "decode_backend": lb.get("decode_backend"),
         }
         return engine, stats
     finally:

@@ -1,0 +1,393 @@
+"""The split fetch/decode pipeline: batched keystream / SHA / decrypt /
+erasure-decode byte-identity against the serial oracles (random, zero,
+and tampered chunks), per-chunk tamper detection inside a batch, staged
+single-flight semantics under stampede, batched CoW write faulting, and
+the batched L2 fetch."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.blockdev import CowBlockDevice, TieredReader
+from repro.core.cache.distributed import DistributedCache
+from repro.core.cache.local import LocalCache
+from repro.core.crypto import aes, convergent
+from repro.core.crypto.sha256v import sha256_many, sha256_many_np
+from repro.core.decode import BatchDecoder
+from repro.core.erasure import ErasureCoder
+from repro.core.loader import ImageReader, create_image
+from repro.core.manifest import ZERO_CHUNK
+from repro.core.store import ChunkStore
+from repro.core.gc import GenerationalGC
+
+from test_batched_read import CS, KEY, CountingStore, image_truth, make_env
+
+RNG = np.random.default_rng(77)
+
+
+# ----------------------------------------------------------- batched AES
+
+def test_ctr_keystream_many_matches_serial():
+    keys = [RNG.integers(0, 256, 32, dtype=np.uint8).tobytes()
+            for _ in range(6)]
+    keys.append(keys[0])                       # duplicate key in one batch
+    lens = [0, 1, 15, 16, 17, 4096, 333]
+    ivs = [RNG.integers(0, 256, 16, dtype=np.uint8).tobytes()
+           for _ in range(7)]
+    got = aes.ctr_keystream_many(keys, lens, ivs)
+    for k, L, iv, g in zip(keys, lens, ivs, got):
+        want = aes.ctr_keystream(k, iv, (L + 15) // 16).reshape(-1)[:L]
+        assert np.array_equal(g, want)
+    assert aes.ctr_keystream_many([], []) == []
+
+
+def test_ctr_keystream_many_jax_backend_identical():
+    from repro.kernels.aes import ctr_keystream_many_jax
+    keys = [RNG.integers(0, 256, 32, dtype=np.uint8).tobytes()
+            for _ in range(3)]
+    lens = [4096, 1, 100]
+    a = aes.ctr_keystream_many(keys, lens)
+    b = ctr_keystream_many_jax(keys, lens)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+def test_ctr_decrypt_many_roundtrip():
+    keys = [RNG.integers(0, 256, 32, dtype=np.uint8).tobytes()
+            for _ in range(4)]
+    datas = [RNG.integers(0, 256, L, dtype=np.uint8).tobytes()
+             for L in (7, 4096, 0, 63)]
+    cts = [aes.ctr_encrypt(d, k) for d, k in zip(datas, keys)]
+    assert aes.ctr_decrypt_many(cts, keys) == datas
+
+
+# ------------------------------------------------------------ batched SHA
+
+def test_sha256_many_np_matches_hashlib():
+    import hashlib
+    lens = [0, 1, 54, 55, 56, 57, 63, 64, 65, 119, 120, 128, 4096]
+    datas = [RNG.integers(0, 256, L, dtype=np.uint8).tobytes() for L in lens]
+    got = sha256_many_np(datas)
+    for d, g in zip(datas, got):
+        assert g == hashlib.sha256(d).digest(), len(d)
+    assert sha256_many(datas) == got            # hashlib backend agrees
+    assert sha256_many_np([]) == []
+
+
+# ------------------------------------------------------- batched decrypt
+
+def _enc_batch(n=5, lens=(4096, 1, 100, 4096, 63)):
+    chunks = [RNG.integers(0, 256, L, dtype=np.uint8).tobytes()
+              for L in lens[:n]]
+    chunks[min(2, n - 1)] = b"\x00" * len(chunks[min(2, n - 1)])  # zero chunk
+    encs = [convergent.encrypt_chunk(c, b"salt" * 4) for c in chunks]
+    return chunks, encs
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(sha_backend="numpy")])
+def test_decrypt_chunks_matches_oracle(kw):
+    chunks, encs = _enc_batch()
+    got = convergent.decrypt_chunks([e.ciphertext for e in encs],
+                                    [e.key for e in encs],
+                                    [e.sha256 for e in encs], **kw)
+    want = [convergent.decrypt_chunk(e.ciphertext, e.key, e.sha256)
+            for e in encs]
+    assert got == want == chunks
+
+
+def test_decrypt_chunks_tamper_raises_per_chunk():
+    chunks, encs = _enc_batch()
+    cts = [e.ciphertext for e in encs]
+    cts[1] = cts[1][:-1] + bytes([cts[1][-1] ^ 0x80])
+    cts[3] = b"\xff" + cts[3][1:]
+    with pytest.raises(convergent.IntegrityError) as ei:
+        convergent.decrypt_chunks(cts, [e.key for e in encs],
+                                  [e.sha256 for e in encs])
+    assert ei.value.bad_positions == [1, 3]
+    # the untampered subset still decodes
+    ok = [0, 2, 4]
+    got = convergent.decrypt_chunks([cts[i] for i in ok],
+                                    [encs[i].key for i in ok],
+                                    [encs[i].sha256 for i in ok])
+    assert got == [chunks[i] for i in ok]
+
+
+def test_batch_decoder_sub_batching_and_backends():
+    chunks, encs = _enc_batch()
+
+    class Ref:
+        def __init__(self, e, i):
+            self.name, self.key, self.sha256 = f"c{i}", e.key, e.sha256
+
+    refs = [Ref(e, i) for i, e in enumerate(encs)]
+    cts = {r.name: e.ciphertext for r, e in zip(refs, encs)}
+    want = {f"c{i}": c for i, c in enumerate(chunks)}
+    for dec in (BatchDecoder("serial"), BatchDecoder("numpy"),
+                BatchDecoder("numpy", max_batch_bytes=64),  # forced splits
+                BatchDecoder("jax")):
+        assert dec.decrypt_batch(refs, cts) == want, dec.backend
+
+
+def test_batch_decoder_tamper_names_chunk():
+    chunks, encs = _enc_batch()
+
+    class Ref:
+        def __init__(self, e, i):
+            self.name, self.key, self.sha256 = f"c{i}", e.key, e.sha256
+
+    refs = [Ref(e, i) for i, e in enumerate(encs)]
+    cts = {r.name: e.ciphertext for r, e in zip(refs, encs)}
+    cts["c2"] = b"tampered" + cts["c2"][8:]
+    with pytest.raises(convergent.IntegrityError, match="c2"):
+        BatchDecoder("numpy").decrypt_batch(refs, cts)
+    with pytest.raises(convergent.IntegrityError):
+        BatchDecoder("serial").decrypt_batch(refs, cts)
+
+
+# ------------------------------------------------------- batched erasure
+
+@pytest.mark.parametrize("k,n", [(4, 5), (3, 6), (2, 3)])
+def test_decode_many_matches_serial_oracle(k, n):
+    coder = ErasureCoder(k, n)
+    chunks = [RNG.integers(0, 256, L, dtype=np.uint8).tobytes()
+              for L in (4096, 33, 4096, 1, 500, 4096)]
+    chunks[1] = b"\x00" * 33
+    stripes_list = []
+    for ch in chunks:
+        full = dict(enumerate(coder.encode(ch)))
+        keep = sorted(RNG.choice(n, size=int(RNG.integers(k, n + 1)),
+                                 replace=False))
+        stripes_list.append({int(j): full[int(j)] for j in keep})
+    lens = [len(c) for c in chunks]
+    got = coder.decode_many(stripes_list, lens)
+    want = [coder.decode(s, L) for s, L in zip(stripes_list, lens)]
+    assert got == want == chunks
+
+
+def test_decode_many_kernel_backend_identical():
+    from repro.kernels.gf256.ops import rs_matmul_fn
+    coder = ErasureCoder(4, 6, matmul_fn=rs_matmul_fn(interpret=True))
+    oracle = ErasureCoder(4, 6)
+    chunks = [RNG.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+              for _ in range(3)]
+    sl = []
+    for ch in chunks:
+        full = dict(enumerate(coder.encode(ch)))
+        sl.append({j: full[j] for j in (1, 3, 4, 5)})
+    assert coder.decode_many(sl, [4096] * 3) \
+        == [oracle.decode(s, 4096) for s in sl] == chunks
+
+
+def test_decode_many_insufficient_stripes_raises():
+    coder = ErasureCoder(4, 5)
+    full = dict(enumerate(coder.encode(b"x" * 4096)))
+    with pytest.raises(ValueError, match="position 1"):
+        coder.decode_many([full, {0: full[0]}], [4096, 4096])
+
+
+# ------------------------------------------------------------- L2 batched
+
+def test_l2_get_chunks_matches_get_chunk():
+    l2 = DistributedCache(num_nodes=8, seed=3)
+    datas = {f"n{i}": RNG.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+             for i in range(6)}
+    for name, d in datas.items():
+        l2.put_chunk(name, d)
+    res = l2.get_chunks(list(datas) + ["absent"], 4096)
+    for name, d in datas.items():
+        lat, got = res[name]
+        assert got == d and lat > 0
+    assert res["absent"][1] is None
+    # serial accessor returns the same bytes (it shares the batch path)
+    for name, d in datas.items():
+        assert l2.get_chunk(name, 4096)[1] == d
+
+
+def test_l2_get_chunks_reconstructs_with_failed_node():
+    l2 = DistributedCache(num_nodes=5, seed=4)
+    datas = {f"m{i}": RNG.integers(0, 256, 2048, dtype=np.uint8).tobytes()
+             for i in range(8)}
+    for name, d in datas.items():
+        l2.put_chunk(name, d)
+    l2.fail_node("cache-002")
+    res = l2.get_chunks(list(datas), 2048)
+    recovered = sum(res[n][1] == d for n, d in datas.items())
+    # 4-of-5: losing one node's stripes still reconstructs everything
+    assert recovered == len(datas)
+
+
+# ----------------------------------------------- staged fetch + stampede
+
+def test_fetch_ciphertexts_is_io_only(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore)
+    r = ImageReader(blob, KEY, store)
+    idxs = list(range(r.layout.num_chunks))
+    fb = r.reader.fetch_ciphertexts(idxs)
+    uniq = {c.name for c in r.manifest.chunks if c.name != ZERO_CHUNK}
+    assert set(fb.ciphertexts) == set(fb.by_name) == uniq
+    assert store.gets == len(uniq)
+    # ciphertexts, not plaintexts: decode stage turns them into the image
+    truth = image_truth(tree)
+    plains = r.reader.decoder.decrypt_batch(
+        [r.reader._refs[v[0]] for v in fb.by_name.values()], fb.ciphertexts)
+    for name, idx_list in fb.by_name.items():
+        for i in idx_list:
+            assert plains[name] == truth[i * CS:(i + 1) * CS]
+            assert fb.ciphertexts[name] != plains[name]
+
+
+def test_staged_stampede_mixed_serial_and_batched(tmp_path):
+    """Six batched + four serial concurrent readers, cold tiers: single
+    flight still guarantees one origin GET per distinct chunk name."""
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore,
+                                        delay_s=0.002)
+    l1 = LocalCache(64 << 20, name="l1ds")
+    r = ImageReader(blob, KEY, store, l1=l1)
+    idxs = list(range(r.layout.num_chunks))
+    truth = image_truth(tree)
+    barrier = threading.Barrier(10)
+    results, errs = [], []
+
+    def batched():
+        try:
+            barrier.wait()
+            results.append(("b", r.reader.fetch_chunks(idxs, parallelism=4)))
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    def serial(i):
+        try:
+            barrier.wait()
+            results.append(("s", {i: r.reader.fetch_chunk(i)}))
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=batched) for _ in range(6)] + \
+              [threading.Thread(target=serial, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    uniq = len({c.name for c in r.manifest.chunks if c.name != ZERO_CHUNK})
+    assert store.gets == uniq
+    for kind, res in results:
+        for i, plain in res.items():
+            assert plain == truth[i * CS:(i + 1) * CS], (kind, i)
+
+
+def test_origin_error_isolated_per_chunk(tmp_path):
+    """A failed origin fetch poisons only ITS chunk's flight: siblings in
+    the same batch still resolve for concurrent waiters, and no flight
+    leaks (a leaked flight would hang the next stampede waiter)."""
+    class FlakyStore(CountingStore):
+        fail_name = None
+
+        def get_chunk(self, root, name):
+            if name == self.fail_name:
+                raise IOError("origin 500")
+            return super().get_chunk(root, name)
+
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=FlakyStore,
+                                        delay_s=0.002)
+    r = ImageReader(blob, KEY, store)
+    truth = image_truth(tree)
+    refs = [c for c in r.manifest.chunks if c.name != ZERO_CHUNK]
+    store.fail_name = refs[0].name
+    good = next(c.index for c in refs if c.name != store.fail_name)
+    errs, oks = [], []
+    barrier = threading.Barrier(2)
+
+    def batched():
+        barrier.wait()
+        try:
+            r.reader.fetch_chunks([c.index for c in refs], parallelism=4)
+        except IOError as e:
+            errs.append(e)
+
+    def serial():
+        barrier.wait()
+        time.sleep(0.001)               # land mid-batch
+        oks.append(r.reader.fetch_chunk(good))
+
+    threads = [threading.Thread(target=batched),
+               threading.Thread(target=serial)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(errs) == 1               # the failing chunk's error surfaced
+    # the concurrent reader of a healthy chunk must NOT inherit the
+    # failing chunk's error (pre-fix: its flight could be poisoned)
+    assert oks == [truth[good * CS:(good + 1) * CS]]
+    assert r.reader._flights == {}      # nothing leaked to hang waiters
+
+
+def test_tampered_l1_ciphertext_raises_through_batch(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path)
+    l1 = LocalCache(64 << 20, name="l1tamper")
+    r = ImageReader(blob, KEY, store, l1=l1)
+    victim = next(c for c in r.manifest.chunks if c.name != ZERO_CHUNK)
+    l1.put(victim.name, b"\x00" * CS)          # poison the cache
+    with pytest.raises(convergent.IntegrityError):
+        r.reader.fetch_chunks(list(range(r.layout.num_chunks)))
+
+
+def test_decoder_backends_identical_through_restore(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path)
+    flats = [ImageReader(blob, KEY, store,
+                         decoder=BatchDecoder(b)).restore_tree()
+             for b in ("serial", "numpy", "jax")]
+    for n, want in tree.items():
+        for flat in flats:
+            assert np.array_equal(flat[n], np.asarray(want)), n
+    lb = ImageReader(blob, KEY, store).reader.last_batch
+    assert lb == {}                             # untouched reader
+
+
+# -------------------------------------------------------- batched CoW RMW
+
+def test_cow_write_batches_base_page_faults(tmp_path):
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore)
+    dev = CowBlockDevice(ImageReader(blob, KEY, store).reader)
+    ref = ImageReader(blob, KEY, store).reader
+    span = 5 * 4096
+    expected = bytearray(ref.read(0, span))
+    # one large unaligned write: both edge pages need base faults, the
+    # interior pages must not fault at all — and the faults are ONE batch
+    off, ln = 100, 3 * 4096 + 200
+    payload = RNG.integers(0, 256, ln, dtype=np.uint8).tobytes()
+    batches_before = len(dev.reader.batch_lat.samples)
+    serial_before = len(dev.reader.read_lat.samples)
+    dev.write(off, payload)
+    assert len(dev.reader.batch_lat.samples) == batches_before + 1
+    expected[off:off + ln] = payload
+    assert dev.read(0, span) == bytes(expected)
+    # aligned full-page write: no base fault, no batch
+    batches_mid = len(dev.reader.batch_lat.samples)
+    dev.write(4096, b"\xaa" * 4096)
+    expected[4096:8192] = b"\xaa" * 4096
+    assert len(dev.reader.batch_lat.samples) == batches_mid
+    assert dev.read(0, span) == bytes(expected)
+    assert len(dev.reader.read_lat.samples) >= serial_before  # sanity
+
+
+def test_cow_write_past_image_end_pages_zero_filled(tmp_path):
+    # image deliberately NOT page-aligned: the tail page extends past the
+    # image end and its base fault must zero-fill, batched like any other
+    store = ChunkStore(tmp_path / "s2")
+    gc = GenerationalGC(store)
+    tree = {"t": RNG.integers(-128, 127, (2 * 4096 + 100,)).astype(np.int8)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=KEY, store=store,
+                           root=gc.active, chunk_size=1024)
+    dev = CowBlockDevice(ImageReader(blob, KEY, store).reader)
+    size = dev.size
+    assert size % 4096 != 0
+    dev.write(size - 10, b"\x42" * 10)  # tail page partially past the end
+    got = dev.read(size - 20, 20)
+    assert got[-10:] == b"\x42" * 10
+    assert got[:10] == b"\x00" * 10     # image padding past the tensor
+    # the RMW base fault preserved real tensor bytes on the same page
+    tbytes = np.ascontiguousarray(tree["t"]).tobytes()
+    assert dev.read(8192, 100) == tbytes[8192:8292]
