@@ -2,18 +2,27 @@
 L1-hit mode, L2-hit mode (+decrypt), origin mode. Reports mode medians and
 mode frequencies.
 
-Also reports the cold-restore pipeline trajectory as THREE configs of the
+Also reports the cold-restore pipeline trajectory as FOUR configs of the
 same image restore (each with its own cold L1, the paper's 36ms origin
 RTT injected as a real delay):
 
   serial                per-chunk fetch + per-chunk decrypt (the oracle)
   batched-fetch         PR 1: pipelined fetch, per-chunk caller-thread
                         decrypt (``BatchDecoder("serial")``)
-  batched-fetch+decode  this PR: pipelined fetch, ONE batched
-                        verify+decrypt pass (``BatchDecoder("numpy")``)
+  batched-fetch+decode  PR 2: pipelined fetch, ONE batched
+                        verify+decrypt pass after fetch completes
+  streamed              this PR: fetch streams resolved ciphertexts into
+                        a bounded queue, decode tiles run WHILE fetch is
+                        in flight (``streamed_restore_s`` +
+                        ``overlap_fraction`` in BENCH_e2e.json)
 
 and writes the machine-readable ``BENCH_e2e.json`` next to the CSV so the
-perf trajectory is tracked across PRs."""
+perf trajectory is tracked across PRs.
+
+Run directly with ``--smoke`` for the fast tier-1 end-to-end exercise of
+the streamed path (used by ``scripts/test.sh``): a small image, real
+origin delay, streamed vs staged vs serial byte-identity plus an overlap
+report, in a few seconds."""
 from __future__ import annotations
 
 import json
@@ -23,11 +32,10 @@ import time
 
 import numpy as np
 
-from benchmarks.workload import WorkerFleet, build_population, zipf_trace
 from repro.core.cache.distributed import DistributedCache
 from repro.core.decode import BatchDecoder
 from repro.core.gc import GenerationalGC
-from repro.core.loader import ImageReader
+from repro.core.loader import ImageReader, create_image
 from repro.core.store import ChunkStore
 from repro.core.telemetry import COUNTERS
 
@@ -46,20 +54,24 @@ def restore_pipeline_configs(store, blob, key) -> dict:
     decode (§2.2), not name dedup."""
     from repro.core.cache.local import LocalCache
 
-    def run(tag, batched, decoder=None):
+    def run(tag, batched, decoder=None, streamed=False):
         r = ImageReader(blob, key, store, origin_delay_s=ORIGIN_RTT_S,
                         l1=LocalCache(64 << 20, name=f"svb_{tag}"),
                         decoder=decoder)
         t0 = time.perf_counter()
-        flat = r.restore_tree(batched=batched, parallelism=PARALLELISM)
+        flat = r.restore_tree(batched=batched, parallelism=PARALLELISM,
+                              streamed=streamed)
         return flat, time.perf_counter() - t0, r.reader.last_batch
 
     flat_serial, t_serial, _ = run("serial", batched=False)
     flat_pr1, t_pr1, lb_pr1 = run("pr1", True, BatchDecoder("serial"))
     flat_now, t_now, lb_now = run("now", True, BatchDecoder("numpy"))
+    flat_str, t_str, lb_str = run("stream", True, BatchDecoder("numpy"),
+                                  streamed=True)
     for n in flat_serial:
         assert np.array_equal(flat_serial[n], flat_pr1[n]) and \
-            np.array_equal(flat_serial[n], flat_now[n]), \
+            np.array_equal(flat_serial[n], flat_now[n]) and \
+            np.array_equal(flat_serial[n], flat_str[n]), \
             f"batched restore diverged on {n}"
 
     # controlled decode-stage comparison: the SAME fetched ciphertext
@@ -84,13 +96,21 @@ def restore_pipeline_configs(store, blob, key) -> dict:
         "serial_s": t_serial,
         "batched_fetch_s": t_pr1,
         "batched_fetch_decode_s": t_now,
+        "streamed_restore_s": t_str,
         "decode_serial_s": d_serial,
         "decode_batched_s": d_batched,
         "decode_serial_in_restore_s": lb_pr1["decode_wall_s"],
         "decode_batched_in_restore_s": lb_now["decode_wall_s"],
         "fetch_wall_s": lb_now["fetch_wall_s"],
+        "streamed_fetch_wall_s": lb_str["fetch_wall_s"],
+        "streamed_decode_busy_s": lb_str["decode_wall_s"],
+        "overlap_s": lb_str["overlap_s"],
+        "overlap_fraction": lb_str["overlap_fraction"],
+        "queue_hwm": lb_str["queue_hwm"],
         "speedup_vs_serial": t_serial / t_now,
         "speedup_vs_batched_fetch": t_pr1 / t_now,
+        "streamed_speedup_vs_serial": t_serial / t_str,
+        "streamed_speedup_vs_staged": t_now / t_str,
         "decode_speedup": d_serial / max(d_batched, 1e-12),
         "sim_speedup": lb_now["sim_serial_s"] /
         max(lb_now["sim_pipelined_s"], 1e-12),
@@ -98,6 +118,8 @@ def restore_pipeline_configs(store, blob, key) -> dict:
 
 
 def run() -> list:
+    from benchmarks.workload import WorkerFleet, build_population, zipf_trace
+
     store = ChunkStore(tempfile.mkdtemp())
     gc = GenerationalGC(store)
     pop = build_population(store, gc.active, n_functions=32, n_bases=3)
@@ -126,6 +148,15 @@ def run() -> list:
                      f"fetch -> {svb['batched_fetch_decode_s']*1e3:.0f}ms "
                      f"+batched decode (sim model {svb['sim_speedup']:.1f}x); "
                      f"byte-identical; JSON -> {BENCH_JSON}"),
+        dict(name="e2e.streamed_speedup_vs_staged",
+             value=svb["streamed_speedup_vs_staged"],
+             derived=f"streamed restore {svb['streamed_restore_s']*1e3:.0f}ms "
+                     f"vs {svb['batched_fetch_decode_s']*1e3:.0f}ms staged: "
+                     f"{svb['overlap_s']*1e3:.0f}ms of "
+                     f"{svb['streamed_decode_busy_s']*1e3:.0f}ms decode "
+                     f"hidden under fetch (overlap fraction "
+                     f"{svb['overlap_fraction']:.2f}, queue hwm "
+                     f"{svb['queue_hwm']})"),
         dict(name="e2e.decode_speedup", value=svb["decode_speedup"],
              derived=f"decode stage: {svb['decode_serial_s']*1e3:.1f}ms "
                      f"per-chunk caller-thread (PR 1) -> "
@@ -143,3 +174,58 @@ def run() -> list:
         dict(name="e2e.p999_us", value=float(np.percentile(lat, 99.9)),
              derived="multi-modality drives the tail (paper §5.1)"),
     ]
+
+
+def smoke(chunks: int = 24, rtt_s: float = 0.004) -> None:
+    """Fast tier-1 smoke (scripts/test.sh): drive the STREAMED restore
+    end-to-end against the serial and staged oracles on a small image
+    with a real injected origin delay, assert byte identity, and print
+    one overlap line. Raises on any divergence."""
+    from repro.core.cache.local import LocalCache
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-smoke-"))
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.standard_normal((chunks * 1024,)).astype(np.float32)}
+    blob, stats = create_image(tree, tenant="smoke", tenant_key=b"K" * 32,
+                               store=store, root=gc.active, chunk_size=4096)
+    key = b"K" * 32
+
+    serial = ImageReader(blob, key, store, origin_delay_s=rtt_s,
+                         l1=LocalCache(8 << 20, name="smk_ser")
+                         ).restore_tree(batched=False)
+    # small tiles so several flush (and decode) while fetch is in flight
+    staged = ImageReader(blob, key, store, origin_delay_s=rtt_s,
+                         l1=LocalCache(8 << 20, name="smk_stg"),
+                         decoder=BatchDecoder("numpy", max_batch_bytes=16 << 10)
+                         ).restore_tree(streamed=False)
+    r = ImageReader(blob, key, store, origin_delay_s=rtt_s,
+                    l1=LocalCache(8 << 20, name="smk_str"),
+                    decoder=BatchDecoder("numpy", max_batch_bytes=16 << 10))
+    t0 = time.perf_counter()
+    streamed = r.restore_tree(streamed=True)
+    t_str = time.perf_counter() - t0
+    for n in serial:
+        assert np.array_equal(serial[n], streamed[n]), f"streamed != serial: {n}"
+        assert np.array_equal(serial[n], staged[n]), f"staged != serial: {n}"
+    lb = r.reader.last_batch
+    assert lb["streamed"] is True and lb["queue_hwm"] <= lb["queue_depth"]
+    print(f"SMOKE OK: streamed restore of {lb['chunks']} chunks in "
+          f"{t_str*1e3:.0f}ms (fetch {lb['fetch_wall_s']*1e3:.0f}ms, decode "
+          f"busy {lb['decode_wall_s']*1e3:.1f}ms, overlap "
+          f"{lb['overlap_s']*1e3:.1f}ms, queue hwm {lb['queue_hwm']}/"
+          f"{lb['queue_depth']}); byte-identical to serial + staged oracles")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast streamed-path end-to-end check (tier-1)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['value']:.6g},\"{row['derived']}\"")

@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 test suite, one command from a fresh clone, fully offline:
-# sets PYTHONPATH=src and runs pytest. `hypothesis` is optional — when
-# absent, tests/conftest.py swaps in the vendored deterministic stub.
+# sets PYTHONPATH=src and runs pytest, then a fast benchmark smoke that
+# drives the streamed restore path end-to-end (byte-identity vs the
+# serial + staged oracles). `hypothesis` is optional — when absent,
+# tests/conftest.py swaps in the vendored deterministic stub.
 #
-#   scripts/test.sh              # whole suite (-x -q)
+#   scripts/test.sh              # whole suite (-x -q) + streamed smoke
 #   scripts/test.sh tests/test_cache.py -k lru   # any pytest args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "$#" -eq 0 ]; then
-    exec python -m pytest -x -q tests
+    python -m pytest -x -q tests
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/e2e_read_latency.py --smoke
+    exit 0
 fi
 exec python -m pytest -x -q "$@"

@@ -36,6 +36,29 @@ Three read APIs:
 * Staged (``fetch_ciphertexts`` + a ``BatchDecoder``): for callers that
   want to overlap their own work between the stages or pick a decode
   backend per call.
+* Streamed (``fetch_chunks(..., streamed=True)`` — the default restore
+  path via ``loader``): stage F runs on a producer thread and *streams*
+  each resolved ciphertext (L1 hits immediately, then L2
+  reconstructions and origin flights the moment they land) into a
+  ``BoundedQueue``; ``BatchDecoder.decrypt_stream`` consumes on the
+  caller thread, tiling and decoding while fetch is still in flight.
+  Decode wall-clock hides behind the deepest miss instead of starting
+  after it; the queue bound gives backpressure so memory stays flat.
+
+Streaming contract (stage F side): with a ``sink`` queue, every distinct
+non-zero chunk name is pushed exactly once — by its L1 probe hit, its
+single-flight leader resolution, or its followed flight. A flight's
+event is always set BEFORE its own push, and an origin wave resolves
+every landed fetch (and submits replacements) before pushing any of
+them — so a resolved chunk's stampeding waiters on other readers never
+wait on sink backpressure. Backpressure still throttles the producer
+(that is its job): names this producer has claimed but not yet resolved
+can be delayed transitively by a saturated sink. A cancelled sink drops
+pushes silently (the producer still warms every cache tier); a fetch
+failure poisons the sink after the failing flight is poisoned. On an
+``IntegrityError`` from either decode mode the offending names are
+evicted from L1 AND L2, so a retry refetches from origin instead of
+replaying the tampered ciphertext from cache.
 
 ``origin_delay_s`` optionally injects a *real* sleep per origin fetch so
 benchmarks can demonstrate the serial-vs-pipelined wall-clock gap; it
@@ -52,6 +75,7 @@ from __future__ import annotations
 
 import contextlib
 import heapq
+import inspect
 import itertools
 import threading
 import time
@@ -59,7 +83,7 @@ from concurrent.futures import FIRST_COMPLETED, wait
 
 import numpy as np
 
-from repro.core.concurrency import LazyPool
+from repro.core.concurrency import BoundedQueue, LazyPool
 from repro.core.crypto import aes, convergent
 from repro.core.decode import BatchDecoder
 from repro.core.layout import ranges_to_chunks
@@ -70,6 +94,7 @@ PAGE = 4096
 ORIGIN_LAT_S = 36e-3          # paper: S3 origin median 36ms (simulated)
 L1_PROBE_S = 2e-6
 DEFAULT_PARALLELISM = 8
+DEFAULT_QUEUE_DEPTH = 32      # streamed hand-off queue bound (chunks)
 
 
 def pipelined_latency(lats, lanes: int) -> float:
@@ -105,15 +130,18 @@ class FetchedBatch:
     out to chunk indices."""
 
     __slots__ = ("by_name", "ciphertexts", "lats", "zero_indices",
-                 "l1_lat", "l1_hits")
+                 "l1_lat", "l1_hits", "sink")
 
-    def __init__(self):
+    def __init__(self, sink: BoundedQueue | None = None):
         self.by_name: dict[str, list[int]] = {}     # name -> chunk indices
         self.ciphertexts: dict[str, bytes] = {}
         self.lats: dict[str, float] = {}            # simulated fetch lat
         self.zero_indices: list[int] = []
         self.l1_lat = 0.0
         self.l1_hits = 0
+        # streaming hand-off: each resolved (name, ciphertext) is pushed
+        # the moment it lands; None = staged mode (terminal dict only)
+        self.sink = sink
 
 
 class TieredReader:
@@ -137,6 +165,10 @@ class TieredReader:
         # long-lived fetch pool, grown on demand: spawning a pool per
         # batch would put thread start/join on the demand-paging hot path
         self._fetch_pool = LazyPool()
+        # can the L2 feed the stream per-chunk (get_chunks(on_ready=...))?
+        l2_get = getattr(l2, "get_chunks", None)
+        self._l2_streams = bool(l2_get) and \
+            "on_ready" in inspect.signature(l2_get).parameters
 
     # ------------------------------------------------------------- chunks
     def _fetch_cipher(self, ref) -> tuple[bytes, float]:
@@ -216,7 +248,8 @@ class TieredReader:
 
     # ------------------------------------------------- stage F: fetch I/O
     def fetch_ciphertexts(self, indices,
-                          parallelism: int = DEFAULT_PARALLELISM) -> FetchedBatch:
+                          parallelism: int = DEFAULT_PARALLELISM,
+                          sink: BoundedQueue | None = None) -> FetchedBatch:
         """Fetch-I/O-only stage: pull every distinct chunk name of
         `indices` into memory as CIPHERTEXT, nothing decrypted.
 
@@ -226,8 +259,16 @@ class TieredReader:
         inside the cache) and the rest through a `parallelism`-wide
         origin pool bounded by `self.concurrency`. Names led by another
         thread (stampede) are waited on last, so their fetch overlaps
-        this call's own I/O."""
-        fb = FetchedBatch()
+        this call's own I/O.
+
+        With a `sink` (streamed mode) every resolved ``(name,
+        ciphertext)`` is additionally pushed into the bounded queue as
+        it lands — L1 hits first, then L2 reconstructions and origin
+        flights in arrival order — so a downstream ``decrypt_stream``
+        decodes while this stage is still fetching. ``sink.put`` blocks
+        when the queue is full (backpressure); see the module docstring
+        for the full streaming contract."""
+        fb = FetchedBatch(sink)
         for i in sorted(set(int(i) for i in indices)):
             ref = self._refs[i]
             if ref.name == ZERO_CHUNK:
@@ -245,6 +286,8 @@ class TieredReader:
                     fb.lats[name] = L1_PROBE_S
                     fb.l1_hits += 1
                     self.read_lat.record(L1_PROBE_S)
+                    if fb.sink is not None:
+                        fb.sink.put((name, ct))
                     continue
             miss.append(name)
         if not miss:
@@ -269,10 +312,12 @@ class TieredReader:
             fb.ciphertexts[name] = flight.ciphertext
             fb.lats[name] = flight.sim_lat
             self.read_lat.record(flight.sim_lat)
+            if fb.sink is not None:
+                fb.sink.put((name, flight.ciphertext))
         return fb
 
     def _resolve_flight(self, name: str, flight: _Flight, ct: bytes,
-                        lat: float, fb: FetchedBatch):
+                        lat: float, fb: FetchedBatch, push: bool = True):
         flight.ciphertext = ct
         flight.sim_lat = lat
         with self._flight_lock:
@@ -281,6 +326,11 @@ class TieredReader:
         fb.ciphertexts[name] = ct
         fb.lats[name] = lat
         self.read_lat.record(lat)
+        # push AFTER event.set(): a flight's own waiters never wait on
+        # sink backpressure. Callers that resolve several names per wave
+        # pass push=False and push after the whole wave resolves.
+        if push and fb.sink is not None:
+            fb.sink.put((name, ct))
 
     def _poison_flight(self, name: str, flight: _Flight, error: Exception):
         flight.error = error
@@ -312,12 +362,26 @@ class TieredReader:
             l2_lat: dict[str, float] = {}
             if pending and self.l2 is not None:
                 cs = self.m.chunk_size
-                if hasattr(self.l2, "get_chunks"):
+                streamed_hits: set[str] = set()
+                if self._l2_streams and fb.sink is not None:
+                    # streamed mode: each chunk resolves (and feeds the
+                    # sink) the moment its k-th stripe reconstructs,
+                    # instead of after the whole L2 wave returns
+                    def on_ready(name, lat, ct):
+                        streamed_hits.add(name)
+                        if self.l1 is not None:
+                            self.l1.put(name, ct)
+                        self._resolve_flight(name, unresolved.pop(name),
+                                             ct, lat, fb)
+                    res = self.l2.get_chunks(pending, cs, on_ready=on_ready)
+                elif hasattr(self.l2, "get_chunks"):
                     res = self.l2.get_chunks(pending, cs)
                 else:
                     res = {n: self.l2.get_chunk(n, cs) for n in pending}
                 still = []
                 for name in pending:
+                    if name in streamed_hits:
+                        continue
                     lat, ct = res[name]
                     if ct is not None:
                         if self.l1 is not None:
@@ -383,6 +447,7 @@ class TieredReader:
                         for n in itertools.islice(name_iter, workers)}
             while fut_name:
                 done, _ = wait(fut_name, return_when=FIRST_COMPLETED)
+                pushes = []
                 for fut in done:
                     name = fut_name.pop(fut)
                     try:
@@ -392,28 +457,57 @@ class TieredReader:
                         if first_err is None:
                             first_err = e     # stop submitting new names
                         continue
+                    # resolve the whole wave (and submit replacements)
+                    # BEFORE any sink push: a backpressure stall must
+                    # not delay flights whose bytes already landed
                     self._resolve_flight(name, unresolved.pop(name),
-                                         ct, lat, fb)
+                                         ct, lat, fb, push=False)
+                    pushes.append((name, ct))
                     if first_err is None:
                         nxt = next(name_iter, None)
                         if nxt is not None:
                             fut_name[pool.submit(fetch_origin, nxt)] = nxt
+                if fb.sink is not None:
+                    for name, ct in pushes:
+                        fb.sink.put((name, ct))
         if first_err is not None:
             for name in name_iter:            # never-started names
                 self._poison_flight(name, unresolved.pop(name), first_err)
             raise first_err
 
     # ------------------------------------------------- stage F + stage D
+    def _invalidate_bad(self, err: convergent.IntegrityError):
+        """Evict tamper-flagged chunk names from every cache tier (L1
+        entry, L2 stripes) so a retry refetches from origin instead of
+        replaying the bad ciphertext."""
+        invalidators = [getattr(tier, "invalidate", None)
+                        for tier in (self.l1, self.l2) if tier is not None]
+        invalidators = [inv for inv in invalidators if inv is not None]
+        for name in err.bad_positions:
+            if isinstance(name, str):
+                for inv in invalidators:
+                    inv(name)
+
     def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
-                     materialize: bool = True) -> dict:
+                     materialize: bool = True, streamed: bool = False,
+                     queue_depth: int = DEFAULT_QUEUE_DEPTH) -> dict:
         """Batched read: {index: plaintext} for a deduplicated chunk set
         — ``fetch_ciphertexts`` (stage F) then one batched decode
         (stage D) on the caller thread via ``self.decoder``.
+
+        With ``streamed=True`` the two stages run concurrently instead
+        of back-to-back: stage F on a producer thread feeding a
+        ``queue_depth``-bounded queue, stage D consuming tiles as they
+        arrive (``fetch_chunks_streamed``). Byte-identical to the staged
+        mode, which stays as the selectable oracle.
 
         With ``materialize=False`` (the prefetch path) the decode stage
         is skipped entirely — tiers are warmed, the returned dict is
         empty, and memory stays flat for arbitrarily large index sets.
         """
+        if streamed and materialize:
+            return self.fetch_chunks_streamed(indices, parallelism,
+                                              queue_depth)
         t0 = time.perf_counter()
         fb = self.fetch_ciphertexts(indices, parallelism)
         fetch_wall = time.perf_counter() - t0
@@ -426,8 +520,12 @@ class TieredReader:
                     out[i] = zero
             if fb.by_name:
                 refs = [self._refs[idxs[0]] for idxs in fb.by_name.values()]
-                plains, decode_wall = self.decoder.decrypt_batch_timed(
-                    refs, fb.ciphertexts)
+                try:
+                    plains, decode_wall = self.decoder.decrypt_batch_timed(
+                        refs, fb.ciphertexts)
+                except convergent.IntegrityError as e:
+                    self._invalidate_bad(e)
+                    raise
                 for name, idxs in fb.by_name.items():
                     plain = plains[name]
                     for i in idxs:
@@ -449,6 +547,99 @@ class TieredReader:
             "fetch_wall_s": fetch_wall,
             "decode_wall_s": decode_wall,
             "decode_backend": self.decoder.backend,
+            "streamed": False,
+        }
+        return out
+
+    def fetch_chunks_streamed(self, indices,
+                              parallelism: int = DEFAULT_PARALLELISM,
+                              queue_depth: int = DEFAULT_QUEUE_DEPTH) -> dict:
+        """Streaming read: stage F runs on a producer thread pushing
+        resolved ciphertexts into a ``queue_depth``-bounded queue; stage
+        D (``decoder.decrypt_stream``) consumes on this thread, decoding
+        tiles while fetch is still in flight. {index: plaintext},
+        byte-identical to the staged mode.
+
+        ``last_batch`` additionally reports ``overlap_s`` (decode work
+        hidden under the fetch wall), ``overlap_fraction``, and the
+        queue's high-water mark; the same figures feed the
+        ``decode.overlap_s`` / ``stream.queue_hwm`` counters."""
+        t0 = time.perf_counter()
+        refs_by_name: dict[str, object] = {}
+        for i in set(int(i) for i in indices):
+            ref = self._refs[i]
+            if ref.name != ZERO_CHUNK and ref.name not in refs_by_name:
+                refs_by_name[ref.name] = ref
+        q = BoundedQueue(queue_depth)
+        holder: dict = {}
+
+        def produce():
+            ft = time.perf_counter()
+            try:
+                holder["fb"] = self.fetch_ciphertexts(indices, parallelism,
+                                                      sink=q)
+            except BaseException as e:
+                holder["err"] = e
+                q.poison(e)
+            else:
+                q.close()
+            finally:
+                holder["fetch_wall"] = time.perf_counter() - ft
+
+        prod = threading.Thread(target=produce, name="stream-fetch",
+                                daemon=True)
+        prod.start()
+        try:
+            plains, dstats = self.decoder.decrypt_stream(q, refs_by_name)
+        except BaseException as e:
+            q.cancel()          # producer puts now drop; it still warms tiers
+            prod.join()
+            if isinstance(e, convergent.IntegrityError):
+                self._invalidate_bad(e)
+            raise
+        prod.join()
+        fb: FetchedBatch = holder["fb"]
+        out: dict[int, bytes] = {}
+        if fb.zero_indices:
+            zero = b"\x00" * self.m.chunk_size
+            for i in fb.zero_indices:
+                out[i] = zero
+        for name, idxs in fb.by_name.items():
+            plain = plains[name]
+            for i in idxs:
+                out[i] = plain
+        total = time.perf_counter() - t0
+        fetch_wall = holder["fetch_wall"]
+        busy = dstats["busy_s"]
+        # overlap identity: decode work not in the post-fetch tail ran
+        # UNDER the fetch wall (the streaming win). `busy` sums per-tile
+        # walls across pool threads, so clamp to the fetch window —
+        # decode can never hide more than the fetch wall itself.
+        tail = max(0.0, total - fetch_wall)
+        overlap = max(0.0, min(busy - tail, fetch_wall))
+        fetch_lats = [lat for lat in fb.lats.values() if lat > L1_PROBE_S]
+        sim_wall = fb.l1_lat + pipelined_latency(fetch_lats, parallelism)
+        self.batch_lat.record(sim_wall)
+        nchunks = len(fb.zero_indices) + sum(len(v) for v in fb.by_name.values())
+        COUNTERS.add("read.batched_chunks", nchunks)
+        COUNTERS.add("decode.overlap_s", overlap)
+        COUNTERS.max_update("stream.queue_hwm", q.high_water)
+        self.last_batch = {
+            "chunks": nchunks,
+            "fetched": len(fb.by_name) - fb.l1_hits,
+            "parallelism": int(parallelism),
+            "sim_serial_s": fb.l1_lat + sum(fetch_lats),
+            "sim_pipelined_s": sim_wall,
+            "wall_s": total,
+            "fetch_wall_s": fetch_wall,
+            "decode_wall_s": busy,
+            "decode_backend": self.decoder.backend,
+            "streamed": True,
+            "overlap_s": overlap,
+            "overlap_fraction": overlap / busy if busy > 0 else 0.0,
+            "queue_hwm": q.high_water,
+            "queue_depth": q.maxsize,
+            "decode_tiles": dstats["tiles"],
         }
         return out
 
@@ -475,15 +666,16 @@ class TieredReader:
         """Serial read: chunks fetched one at a time, in order."""
         return self._assemble(offset, length, {})
 
-    def read_many(self, ranges,
-                  parallelism: int = DEFAULT_PARALLELISM) -> list:
+    def read_many(self, ranges, parallelism: int = DEFAULT_PARALLELISM,
+                  streamed: bool = False) -> list:
         """Batched read: one `fetch_chunks` over the union chunk set of
         all (offset, length) `ranges` (overlaps deduplicated), then each
         range is assembled from the in-memory chunks. Byte-identical to
-        calling `read` per range."""
+        calling `read` per range. ``streamed=True`` overlaps decode with
+        fetch (the default restore path via ``loader``)."""
         ranges = list(ranges)
         idxs = ranges_to_chunks(ranges, self.m.chunk_size)
-        chunks = self.fetch_chunks(idxs, parallelism)
+        chunks = self.fetch_chunks(idxs, parallelism, streamed=streamed)
         return [self._assemble(off, ln, chunks) for off, ln in ranges]
 
 

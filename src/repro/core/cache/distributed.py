@@ -15,11 +15,16 @@ through a shared thread pool — stripes overlap each other's (real)
 service time instead of queueing in-process, and the batched
 ``get_chunks`` API overlaps stripes ACROSS chunks too, then
 reconstructs every hit through one ``ErasureCoder.decode_many`` call
-(one GF matmul per erasure signature, not one per chunk).
+(one GF matmul per erasure signature, not one per chunk). In streaming
+mode (``get_chunks(..., on_ready=...)``, the streamed restore path)
+each chunk instead reconstructs the moment its k-th stripe lands and is
+handed to the callback immediately, so L2 hits feed the downstream
+decode stage while later stripes are still in flight.
 """
 from __future__ import annotations
 
 import threading
+from concurrent.futures import FIRST_COMPLETED, wait
 
 import numpy as np
 
@@ -97,6 +102,12 @@ class CacheNode:
             self.get_lat.record(serve)
             return (serve + self.latency.net_sample(), v)
 
+    def remove(self, key: str):
+        """Drop `key` from both tiers (tamper invalidation path)."""
+        with self._lock:
+            self.mem.remove(key)
+            self.flash.remove(key)
+
     def put(self, key: str, value: bytes):
         if self.failed:
             return 0.1
@@ -154,29 +165,67 @@ class DistributedCache:
         (latency_s, bytes | None)."""
         return self.get_chunks([name], chunk_len)[name]
 
-    def get_chunks(self, names: list, chunk_len: int) -> dict:
+    def get_chunks(self, names: list, chunk_len: int,
+                   on_ready=None) -> dict:
         """Batched constant-work fetch: every name's n stripe GETs go
         through the shared pool in ONE wave — per-node service time of
         one chunk's stripes overlaps both its siblings' and other
         chunks' — and every hit is reconstructed through ONE
         ``decode_many`` call. Per name the work is unchanged: always n
         requests, any k reconstruct, latency = k-th fastest arrival.
-        Returns {name: (latency_s, bytes | None)}."""
+        Returns {name: (latency_s, bytes | None)}.
+
+        ``on_ready(name, latency_s, data)`` switches to STREAMING
+        reconstruction: each chunk is rebuilt and handed to the callback
+        the moment its k-th stripe lands (per-chunk ``decode``), feeding
+        the streamed read path instead of a terminal dict. The work per
+        name is unchanged (still n requests issued up front — the
+        constant-work property holds); the reported latency is the
+        worst of the k earliest-arriving hits."""
         k, n = self.coder.k, self.coder.n
         names = list(dict.fromkeys(names))   # dedup: one wave per name
         pool = self._stripe_pool.get(self.stripe_parallelism)
-        futs = []
+        fut_meta = {}
         for name in names:
             nodes = self.ring.lookup(name, count=n)
             for i, node in enumerate(nodes):
-                futs.append((name, i, pool.submit(
-                    self.nodes[node].get, self._stripe_key(name, i))))
+                fut_meta[pool.submit(
+                    self.nodes[node].get, self._stripe_key(name, i))] = (name, i)
         responses: dict[str, list] = {name: [] for name in names}
-        for name, i, fut in futs:
+        out: dict = {}
+        if on_ready is not None:
+            # streaming mode: process stripe arrivals as they complete
+            done_count = {name: 0 for name in names}
+            emitted: set = set()
+            pending = set(fut_meta)
+            while pending:
+                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    name, i = fut_meta[fut]
+                    lat, v = fut.result()
+                    done_count[name] += 1
+                    resp = responses[name]
+                    if v is not None:
+                        resp.append((lat, i, v))
+                    if name not in emitted and len(resp) >= k:
+                        emitted.add(name)
+                        resp.sort()
+                        lat_k = resp[k - 1][0]
+                        data = self.coder.decode(
+                            {j: s for _, j, s in resp[:k]}, chunk_len)
+                        COUNTERS.inc("l2.hits")
+                        self.fetch_lat.record(lat_k)
+                        out[name] = (lat_k, data)
+                        on_ready(name, lat_k, data)
+                    elif name not in emitted and done_count[name] == n:
+                        COUNTERS.inc("l2.misses")
+                        out[name] = (max((r[0] for r in resp), default=0.0),
+                                     None)
+            return out
+        for fut, (name, i) in fut_meta.items():
             lat, v = fut.result()
             if v is not None:
                 responses[name].append((lat, i, v))
-        out = {}
         hits, stripes_list, lens = [], [], []
         for name in names:
             resp = responses[name]
@@ -195,6 +244,15 @@ class DistributedCache:
                 self.fetch_lat.record(lat)
                 out[name] = (lat, data)
         return out
+
+    def invalidate(self, name: str):
+        """Drop every stripe of `name` from every placement node (the
+        reader calls this when a reconstructed chunk fails its integrity
+        check, so a retry goes back to origin instead of replaying the
+        bad bytes)."""
+        nodes = self.ring.lookup(name, count=self.coder.n)
+        for i, node in enumerate(nodes):
+            self.nodes[node].remove(self._stripe_key(name, i))
 
     def get_chunk_unreplicated(self, name: str, chunk_len: int):
         """Comparison path for Fig 9: a hypothetical k-of-k read — all k

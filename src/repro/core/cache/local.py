@@ -24,6 +24,11 @@ class LocalCache:
     def put(self, key: str, value: bytes):
         self.lru.put(key, value)
 
+    def invalidate(self, key: str):
+        """Drop `key` (the reader evicts tamper-flagged ciphertexts so a
+        retry refetches instead of replaying the bad bytes)."""
+        self.lru.remove(key)
+
     def __contains__(self, key):
         return key in self.lru
 

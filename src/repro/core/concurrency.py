@@ -3,14 +3,107 @@
 Cold starts are concurrency-limited; when in-flight work exceeds the
 limit, new starts are REJECTED (not queued) until in-flight ones complete,
 which bounds the demand amplification of an empty cache (Little's-law
-spiral)."""
+spiral).
+
+``BoundedQueue`` is the hand-off primitive of the streaming fetch→decode
+pipeline: the fetch producer pushes resolved ciphertexts as they land,
+the decode consumer drains them into tiles, and the bound gives
+backpressure — a slow decode stage throttles fetch instead of buffering
+the whole image in memory."""
 from __future__ import annotations
 
 import threading
 import weakref
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.core.telemetry import COUNTERS
+
+_QUEUE_DONE = object()          # internal end-of-stream sentinel
+
+
+class BoundedQueue:
+    """Bounded, closable hand-off queue between one producer stage and
+    one consumer stage (the streaming pipeline's backpressure primitive).
+
+    Contract:
+
+    * ``put(item)`` blocks while the queue holds ``maxsize`` items; after
+      ``cancel()`` it stops blocking and returns ``False``, silently
+      dropping the item, so a producer never deadlocks on a consumer
+      that has bailed out (e.g. on a decode error).
+    * ``close()``: producer finished; iteration ends once drained.
+    * ``poison(exc)``: producer failed; the consumer drains any items
+      already queued, then ``exc`` is raised from its next ``get()``.
+    * ``cancel()``: consumer gone; blocked and future puts drop.
+    * ``high_water`` is the maximum depth ever reached — the concurrency
+      tests assert it never exceeds ``maxsize``.
+
+    Iterating the queue yields items until close (StopIteration) or
+    poison (raises). One producer + one consumer is the intended use;
+    all methods are nonetheless thread-safe.
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = max(1, int(maxsize))
+        self._dq: deque = deque()
+        self._mu = threading.Lock()
+        self._not_full = threading.Condition(self._mu)
+        self._not_empty = threading.Condition(self._mu)
+        self._closed = False
+        self._cancelled = False
+        self._error: BaseException | None = None
+        self.high_water = 0
+
+    def put(self, item) -> bool:
+        with self._mu:
+            while len(self._dq) >= self.maxsize and not self._cancelled:
+                self._not_full.wait()
+            if self._cancelled:
+                return False
+            assert not self._closed, "put() after close()"
+            self._dq.append(item)
+            self.high_water = max(self.high_water, len(self._dq))
+            self._not_empty.notify()
+            return True
+
+    def close(self):
+        with self._mu:
+            self._closed = True
+            self._not_empty.notify_all()
+
+    def poison(self, exc: BaseException):
+        with self._mu:
+            self._error = exc
+            self._closed = True
+            self._not_empty.notify_all()
+
+    def cancel(self):
+        with self._mu:
+            self._cancelled = True
+            self._not_full.notify_all()
+            self._not_empty.notify_all()
+
+    def get(self):
+        """Next item; raises the poison error (drained-first) or returns
+        the internal DONE sentinel once closed and empty."""
+        with self._mu:
+            while not self._dq and not self._closed:
+                self._not_empty.wait()
+            if self._dq:
+                item = self._dq.popleft()
+                self._not_full.notify()
+                return item
+            if self._error is not None:
+                raise self._error
+            return _QUEUE_DONE
+
+    def __iter__(self):
+        while True:
+            item = self.get()
+            if item is _QUEUE_DONE:
+                return
+            yield item
 
 
 class LazyPool:

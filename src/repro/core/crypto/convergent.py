@@ -78,7 +78,10 @@ def decrypt_chunks(ciphertexts: list, keys: list, expect_sha256s: list, *,
 
 
 class IntegrityError(Exception):
-    """args[1], when present, lists the offending batch positions."""
+    """args[1], when present, lists the offending chunks: batch
+    positions when raised by ``decrypt_chunks``, chunk names when
+    raised by ``core.decode.BatchDecoder`` (which aggregates across
+    tiles)."""
 
     @property
     def bad_positions(self) -> list:

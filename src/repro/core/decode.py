@@ -6,6 +6,27 @@ staged pass: a batched SHA verify followed by a batched AES-CTR
 keystream (``convergent.decrypt_chunks``), instead of PR 1's per-chunk
 ``decrypt_chunk`` loop on the caller thread.
 
+Two consumption modes:
+
+* **Staged** (``decrypt_batch`` / ``decrypt_batch_timed``): the whole
+  fetched set at once, split into cache-resident tiles, decoded on the
+  pool. Decode starts after fetch completes.
+* **Streaming** (``decrypt_stream``): consume ``(name, ciphertext)``
+  pairs from a ``BoundedQueue`` WHILE the fetch stage is still
+  producing. Chunks accumulate into ``max_batch_bytes`` tiles with
+  exactly the ``_split`` invariants (a tile never exceeds the cap unless
+  a single chunk does; arrival order is preserved within the stream) and
+  each full tile is dispatched to the GIL-releasing pool the moment it
+  fills — so decode wall-clock hides behind the deepest fetch miss
+  instead of starting after it. The streaming contract:
+
+  - the stream is drained even after a bad tile, and the final
+    ``IntegrityError`` names EVERY bad chunk across all tiles, in sorted
+    (deterministic) order — never a partial report;
+  - no plaintext of a bad chunk is ever returned;
+  - a fetch-side failure (queue poisoned) is re-raised only after all
+    dispatched tiles finish, so no decode worker is left running.
+
 Why batching wins where per-chunk threading could not (ROADMAP item 1):
 the per-chunk pull path interleaved ~170 small numpy dispatches per
 chunk with python glue, so worker threads thrashed the GIL. The batch
@@ -31,7 +52,9 @@ Backends:
 from __future__ import annotations
 
 import os
+import threading
 import time
+import warnings
 
 from repro.core.concurrency import LazyPool
 from repro.core.crypto import convergent
@@ -60,6 +83,11 @@ class BatchDecoder:
             self.threads = 1          # XLA owns its own thread pool
         self._pool = LazyPool()
         self.last_wall_s = 0.0
+        # decrypt_batch concurrency detection (the last_wall_s footgun):
+        # internal hot paths all use decrypt_batch_timed / decrypt_stream
+        self._state_lock = threading.Lock()
+        self._inflight_batches = 0
+        self._warned_concurrent = False
 
     def decrypt_batch(self, refs: list, ciphertexts: dict) -> dict:
         """refs: ChunkRefs (one per distinct name); ciphertexts:
@@ -67,11 +95,31 @@ class BatchDecoder:
         raise ``IntegrityError`` naming every offending chunk name in
         the batch — no bad chunk's plaintext is ever returned.
 
-        ``last_wall_s`` is a convenience for single-threaded callers;
-        concurrent callers should use ``decrypt_batch_timed``."""
-        out, wall = self.decrypt_batch_timed(refs, ciphertexts)
-        self.last_wall_s = wall
-        return out
+        ``last_wall_s`` is a convenience for single-threaded callers
+        ONLY: concurrent calls race on it, so this method emits a
+        one-time ``RuntimeWarning`` when it detects overlap. Concurrent
+        callers (and every internal caller) must use
+        ``decrypt_batch_timed``, which never touches shared state."""
+        with self._state_lock:
+            self._inflight_batches += 1
+            concurrent = self._inflight_batches > 1
+            warn = concurrent and not self._warned_concurrent
+            if warn:
+                self._warned_concurrent = True
+        try:
+            if concurrent:
+                COUNTERS.inc("decode.concurrent_decrypt_batch")
+            if warn:
+                warnings.warn(
+                    "BatchDecoder.decrypt_batch called concurrently: "
+                    "last_wall_s is unreliable under concurrency; use "
+                    "decrypt_batch_timed", RuntimeWarning, stacklevel=2)
+            out, wall = self.decrypt_batch_timed(refs, ciphertexts)
+            self.last_wall_s = wall
+            return out
+        finally:
+            with self._state_lock:
+                self._inflight_batches -= 1
 
     def decrypt_batch_timed(self, refs: list, ciphertexts: dict) -> tuple:
         """``decrypt_batch`` returning ({name: plaintext}, wall_seconds)
@@ -82,8 +130,11 @@ class BatchDecoder:
         bad_names: list[str] = []
         if self.backend == "serial":
             for ref in refs:
-                out[ref.name] = convergent.decrypt_chunk(
-                    ciphertexts[ref.name], ref.key, ref.sha256)
+                try:
+                    out[ref.name] = convergent.decrypt_chunk(
+                        ciphertexts[ref.name], ref.key, ref.sha256)
+                except convergent.IntegrityError:
+                    bad_names.append(ref.name)
         else:
             tiles = list(self._split(refs, ciphertexts))
             if len(tiles) > 1 and self.threads > 1:
@@ -96,9 +147,102 @@ class BatchDecoder:
                 bad_names.extend(bad)
         if bad_names:
             raise convergent.IntegrityError(
-                f"chunk ciphertext hash mismatch: {sorted(bad_names)}")
+                f"chunk ciphertext hash mismatch: {sorted(bad_names)}",
+                sorted(bad_names))
         COUNTERS.add("decode.batched_chunks", len(out))
         return out, time.perf_counter() - t0
+
+    def decrypt_stream(self, queue, refs_by_name: dict) -> tuple:
+        """Streaming consumer: drain ``(name, ciphertext)`` pairs from a
+        ``BoundedQueue`` (see module docstring for the contract),
+        accumulating ``max_batch_bytes`` tiles and dispatching each to
+        the pool while the fetch producer is still running.
+
+        ``refs_by_name`` maps chunk name -> ChunkRef (key + expected
+        sha256). Returns ``({name: plaintext}, stats)`` where stats has
+        ``busy_s`` (summed decode work time, the overlap-accounting
+        input), ``wall_s`` (consumer elapsed) and ``tiles``.
+
+        A poisoned queue (fetch failure) re-raises the producer's error
+        after all dispatched tiles complete; tampered chunks raise one
+        ``IntegrityError`` naming every bad chunk across all tiles."""
+        t0 = time.perf_counter()
+        out: dict[str, bytes] = {}
+        bad_names: list[str] = []
+        results: list = []
+        futures: list = []
+        pool = self._pool.get(self.threads) \
+            if self.backend != "serial" and self.threads > 1 else None
+        part: list = []
+        cts: dict[str, bytes] = {}
+        size = 0
+        busy_inline = 0.0
+
+        def flush():
+            nonlocal part, cts, size
+            if not part:
+                return
+            if pool is not None:
+                futures.append(pool.submit(self._decode_tile_timed, part, cts))
+            else:
+                results.append(self._decode_tile_timed(part, cts))
+            part, cts, size = [], {}, 0
+
+        stream_err = None
+        try:
+            for name, ct in queue:
+                ref = refs_by_name[name]
+                if self.backend == "serial":
+                    ts = time.perf_counter()
+                    try:
+                        out[ref.name] = convergent.decrypt_chunk(
+                            ct, ref.key, ref.sha256)
+                    except convergent.IntegrityError:
+                        bad_names.append(ref.name)
+                    busy_inline += time.perf_counter() - ts
+                    continue
+                if part and size + len(ct) > self.max_batch_bytes:
+                    flush()
+                part.append(ref)
+                cts[name] = ct
+                size += len(ct)
+        except BaseException as e:
+            stream_err = e
+        else:
+            flush()
+        # drain EVERY dispatched tile, even after an error, so no decode
+        # worker is left running and no tile's bad names are lost
+        tile_err = None
+        for f in futures:
+            try:
+                results.append(f.result())
+            except BaseException as e:      # unexpected: not an
+                if tile_err is None:        # IntegrityError (_decode_tile
+                    tile_err = e            # catches those)
+        busy = busy_inline
+        for plains, bad, tile_wall in results:
+            out.update(plains)
+            bad_names.extend(bad)
+            busy += tile_wall
+        if stream_err is not None:          # fetch failure dominates
+            raise stream_err
+        if tile_err is not None:
+            raise tile_err
+        if bad_names:
+            raise convergent.IntegrityError(
+                f"chunk ciphertext hash mismatch: {sorted(bad_names)}",
+                sorted(bad_names))
+        COUNTERS.add("decode.batched_chunks", len(out))
+        return out, {"busy_s": busy, "wall_s": time.perf_counter() - t0,
+                     "tiles": len(results)}
+
+    def _decode_tile_timed(self, part: list, ciphertexts: dict) -> tuple:
+        """``_decode_tile`` plus its own wall time (runs on a pool
+        thread; the per-tile walls sum to the stream's decode busy
+        time)."""
+        t0 = time.perf_counter()
+        plains, bad = self._decode_tile(part, ciphertexts)
+        return plains, bad, time.perf_counter() - t0
 
     def _decode_tile(self, part: list, ciphertexts: dict) -> tuple:
         """One tile through the batched verify+decrypt pass. Returns

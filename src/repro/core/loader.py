@@ -8,15 +8,19 @@ restore:       manifest -> TieredReader -> tensors on demand. The
 shard-aware variant fetches only the chunks covering this worker's
 parameter shards (the paper's *sparsity* property mapped to SPMD shards).
 
-Restore is *batched by default*: ``restore_tree`` / ``restore_shards`` /
-``tensor_shard`` compute every byte range they need up front and hand the
-whole set to ``TieredReader.read_many``, which coalesces the ranges into
-one deduplicated chunk set and runs the staged fetch/decode pipeline —
-all misses fetched through a parallel, single-flighted I/O stage, then
-every ciphertext decrypted+verified in one batched decode pass
-(``core.decode``) — so cold-start wall clock scales with the deepest
-miss plus one dense decode, not the sum of per-chunk costs (paper §2.2).
-Pass ``batched=False`` (or use ``tensor``) for the serial reference path.
+Restore is *batched and streamed by default*: ``restore_tree`` /
+``restore_shards`` / ``tensor_shard`` compute every byte range they need
+up front and hand the whole set to ``TieredReader.read_many``, which
+coalesces the ranges into one deduplicated chunk set and runs the
+fetch/decode pipeline — all misses fetched through a parallel,
+single-flighted I/O stage that streams each resolved ciphertext into a
+bounded queue, where the decode stage (``core.decode``) verifies and
+decrypts tiles WHILE fetch is still in flight — so cold-start wall clock
+scales with the deepest miss plus only the decode tail, not
+fetch + decode back-to-back (paper §2.2). Pass ``streamed=False`` for
+the staged two-phase pipeline (the byte-identity oracle for streaming)
+or ``batched=False`` (or use ``tensor``) for the fully serial reference
+path.
 """
 from __future__ import annotations
 
@@ -134,17 +138,21 @@ class ImageReader:
         return list(self.layout.tensors)
 
     def restore_tree(self, names=None, *, batched: bool = True,
-                     parallelism: int = DEFAULT_PARALLELISM) -> dict:
+                     parallelism: int = DEFAULT_PARALLELISM,
+                     streamed: bool = True) -> dict:
         """Flat {path: array} for all (or selected) tensors.
 
         With ``batched`` (default) all tensors' chunks are fetched in one
-        pipelined batch; ``batched=False`` keeps the serial
+        pipelined batch, decode overlapping fetch (``streamed``, the
+        default); ``streamed=False`` selects the staged two-phase
+        pipeline and ``batched=False`` keeps the serial
         one-chunk-at-a-time loop for comparison."""
         names = names if names is not None else self.tensor_names()
         if not batched:
             return {n: self.tensor(n) for n in names}
         return self.restore_shards({n: None for n in names},
-                                   parallelism=parallelism)
+                                   parallelism=parallelism,
+                                   streamed=streamed)
 
     # ------------------------------------------------- shard-aware restore
     def shard_chunks(self, shard_slices: dict) -> list:
@@ -156,11 +164,13 @@ class ImageReader:
         return ranges_to_chunks(ranges, self.manifest.chunk_size)
 
     def restore_shards(self, shard_slices: dict, *,
-                       parallelism: int = DEFAULT_PARALLELISM) -> dict:
+                       parallelism: int = DEFAULT_PARALLELISM,
+                       streamed: bool = True) -> dict:
         """Batched restore of {name: dim_slices | None (full tensor)}.
 
         Computes every byte range up front, fetches the union chunk set
-        once via ``read_many``, then assembles each tensor/shard."""
+        once via ``read_many`` (streamed fetch→decode overlap by
+        default), then assembles each tensor/shard."""
         plan = []                       # (name, ranges, out_shape, dtype)
         all_ranges = []
         for name, sl in shard_slices.items():
@@ -174,7 +184,8 @@ class ImageReader:
                 shape = tuple(e - s for s, e in sl)
             plan.append((name, ranges, shape, dt))
             all_ranges.extend(ranges)
-        bufs = iter(self.reader.read_many(all_ranges, parallelism))
+        bufs = iter(self.reader.read_many(all_ranges, parallelism,
+                                          streamed=streamed))
         out = {}
         for name, ranges, shape, dt in plan:
             raw = b"".join(next(bufs) for _ in ranges)
@@ -184,10 +195,12 @@ class ImageReader:
         return out
 
     def tensor_shard(self, name: str, dim_slices: list,
-                     parallelism: int = DEFAULT_PARALLELISM) -> np.ndarray:
+                     parallelism: int = DEFAULT_PARALLELISM,
+                     streamed: bool = True) -> np.ndarray:
         """Fetch only the bytes of one rectangular shard (batched)."""
         return self.restore_shards({name: dim_slices},
-                                   parallelism=parallelism)[name]
+                                   parallelism=parallelism,
+                                   streamed=streamed)[name]
 
     def prefetch(self, chunk_indices: list, parallelism: int = DEFAULT_PARALLELISM):
         """Concurrently warm the cache tiers for `chunk_indices`.

@@ -8,6 +8,11 @@ import numpy as np
 
 
 class Counters:
+    """Process-wide counters. Every mutator AND reader takes the lock:
+    fetch pool threads, decoder pool threads, and streaming producer
+    threads all update concurrently, and the totals must stay exact
+    (tested by hammering from 8 threads)."""
+
     def __init__(self):
         self._lock = threading.Lock()
         self._c = defaultdict(float)
@@ -18,8 +23,16 @@ class Counters:
 
     add = inc
 
+    def max_update(self, name: str, value: float):
+        """Monotonic high-water mark (e.g. the streaming hand-off
+        queue's max depth)."""
+        with self._lock:
+            if value > self._c[name]:
+                self._c[name] = value
+
     def get(self, name: str) -> float:
-        return self._c.get(name, 0.0)
+        with self._lock:
+            return self._c.get(name, 0.0)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -47,13 +60,20 @@ class LatencyRecorder:
         with self._lock:
             self.samples.append(seconds)
 
+    def _snapshot(self) -> np.ndarray:
+        # readers run concurrently with recording threads; snapshot under
+        # the lock so np.array never sees a list mid-append
+        with self._lock:
+            return np.array(self.samples, dtype=float)
+
     def percentile(self, p: float) -> float:
-        if not self.samples:
+        a = self._snapshot()
+        if not len(a):
             return float("nan")
-        return float(np.percentile(np.array(self.samples), p))
+        return float(np.percentile(a, p))
 
     def ecdf(self, points: int = 200):
-        xs = np.sort(np.array(self.samples))
+        xs = np.sort(self._snapshot())
         ys = np.arange(1, len(xs) + 1) / len(xs)
         if len(xs) > points:
             idx = np.linspace(0, len(xs) - 1, points).astype(int)
@@ -61,9 +81,9 @@ class LatencyRecorder:
         return xs.tolist(), ys.tolist()
 
     def summary(self) -> dict:
-        if not self.samples:
+        a = self._snapshot()
+        if not len(a):
             return {"n": 0}
-        a = np.array(self.samples)
         return {"n": len(a), "mean": float(a.mean()),
                 "p50": float(np.percentile(a, 50)),
                 "p99": float(np.percentile(a, 99)),

@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--decode-backend", default="numpy",
                     choices=["numpy", "jax", "serial"],
                     help="post-fetch batch decode backend")
+    ap.add_argument("--read-path", default="streamed",
+                    choices=["streamed", "staged"],
+                    help="streamed = decode tiles overlap the fetch via a "
+                         "bounded hand-off queue; staged = two-phase "
+                         "fetch-then-decode (the byte-identity oracle)")
     args = ap.parse_args()
 
     import jax
@@ -84,13 +89,19 @@ def main():
                                root=root, limiter=limiter,
                                fetch_limiter=fetch_limiter,
                                parallelism=args.parallelism,
+                               streamed=args.read_path == "streamed",
                                decoder=BatchDecoder(args.decode_backend),
                                max_batch=4, max_len=64)
-    print(f"cold start {time.time()-t0:.2f}s "
+    overlap = ""
+    if stats.get("streamed"):
+        overlap = (f", {stats['overlap_s']:.2f}s decode hidden under fetch "
+                   f"(queue hwm {stats['queue_hwm']})")
+    print(f"cold start {time.time()-t0:.2f}s [{args.read_path}] "
           f"(load {stats['load_seconds']:.2f}s, "
           f"origin fetches {stats['origin_fetches']:.0f}, "
           f"fetch {stats['fetch_wall_s']:.2f}s + "
-          f"decode[{stats['decode_backend']}] {stats['decode_wall_s']:.2f}s)")
+          f"decode[{stats['decode_backend']}] {stats['decode_wall_s']:.2f}s"
+          f"{overlap})")
 
     reqs = [Request(i, prompt=[1 + i, 2, 3], max_new=args.max_new)
             for i in range(args.requests)]

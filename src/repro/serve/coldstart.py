@@ -23,15 +23,17 @@ from repro.train.checkpoint import tree_from_flat
 def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
                l1=None, l2=None, root=None, max_batch=4, max_len=128,
                limiter=None, fetch_limiter=None, parallelism=DEFAULT_PARALLELISM,
-               batched=True, decoder=None) -> tuple:
+               batched=True, streamed=True, decoder=None) -> tuple:
     """Returns (engine, stats).
 
-    The restore goes through the staged fetch/decode read path
+    The restore goes through the streaming fetch→decode read path
     (`parallelism`-wide origin pipeline, optionally bounded by
-    `fetch_limiter`, a BlockingLimiter; post-fetch decrypt+verify as one
-    batched decode whose backend `decoder` selects); `batched=False`
-    keeps the serial chunk loop for comparison. `limiter` is the
-    admission-control RejectingLimiter."""
+    `fetch_limiter`, a BlockingLimiter; decrypt+verify tiles overlap the
+    fetch via a bounded hand-off queue, backend selected by `decoder`).
+    `streamed=False` selects the staged two-phase pipeline (decode after
+    fetch) and `batched=False` the serial chunk loop, both kept as
+    byte-identity oracles. `limiter` is the admission-control
+    RejectingLimiter."""
     if limiter is not None and not limiter.try_acquire():
         COUNTERS.inc("serve.coldstart_rejected")
         raise RuntimeError("cold-start rejected: concurrency limit")
@@ -42,7 +44,8 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
                              root=root, concurrency=fetch_limiter,
                              decoder=decoder)
         template = model.param_shapes()
-        flat = reader.restore_tree(batched=batched, parallelism=parallelism)
+        flat = reader.restore_tree(batched=batched, parallelism=parallelism,
+                                   streamed=streamed)
         params = tree_from_flat(template, flat)
         params = jax.tree.map(
             lambda p: p.astype(np.float32) if p.dtype == np.float64 else p, params)
@@ -56,10 +59,15 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
             "l2_sim_latency_p50": reader.reader.read_lat.percentile(50),
             "sim_pipelined_s": lb.get("sim_pipelined_s"),
             "sim_serial_s": lb.get("sim_serial_s"),
-            # staged-pipeline split: I/O wall vs the one batched decode
+            # pipeline split: I/O wall vs decode work; in streamed mode
+            # overlap_s is the decode work hidden under the fetch wall
             "fetch_wall_s": lb.get("fetch_wall_s"),
             "decode_wall_s": lb.get("decode_wall_s"),
             "decode_backend": lb.get("decode_backend"),
+            "streamed": lb.get("streamed"),
+            "overlap_s": lb.get("overlap_s"),
+            "overlap_fraction": lb.get("overlap_fraction"),
+            "queue_hwm": lb.get("queue_hwm"),
         }
         return engine, stats
     finally:
