@@ -1,11 +1,13 @@
 # Offline-friendly entry points (no network-dependent packages).
-.PHONY: test bench bench-read
+.PHONY: test verify bench bench-read
 
-test:            ## tier-1 suite: PYTHONPATH=src pytest -x -q
+test: verify     ## alias for verify
+
+verify:          ## tier-1 suite + benchmark smoke, fail-fast on regressions
 	./scripts/test.sh
 
 bench:           ## all paper-figure benchmarks (CSV to stdout; also writes BENCH_e2e.json)
 	PYTHONPATH=src:. python benchmarks/run.py
 
-bench-read:      ## Fig 11 + serial / batched-fetch / batched-fetch+decode restore comparison -> BENCH_e2e.json
+bench-read:      ## Fig 11 + restore trajectory + multi-tenant scenario -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py e2e_read_latency

@@ -2,32 +2,44 @@
 L1-hit mode, L2-hit mode (+decrypt), origin mode. Reports mode medians and
 mode frequencies.
 
-Also reports the cold-restore pipeline trajectory as FOUR configs of the
-same image restore (each with its own cold L1, the paper's 36ms origin
-RTT injected as a real delay):
+Also reports the cold-restore pipeline trajectory as FIVE ``ReadPolicy``
+configs of the same image restore through an ``ImageService`` (each with
+its own cold L1, the paper's 36ms origin RTT injected as a real delay):
 
   serial                per-chunk fetch + per-chunk decrypt (the oracle)
   batched-fetch         PR 1: pipelined fetch, per-chunk caller-thread
-                        decrypt (``BatchDecoder("serial")``)
+                        decrypt (decode backend "serial")
   batched-fetch+decode  PR 2: pipelined fetch, ONE batched
                         verify+decrypt pass after fetch completes
-  streamed              this PR: fetch streams resolved ciphertexts into
+  streamed              PR 3: fetch streams resolved ciphertexts into
                         a bounded queue, decode tiles run WHILE fetch is
-                        in flight (``streamed_restore_s`` +
-                        ``overlap_fraction`` in BENCH_e2e.json)
+                        in flight
+  streamed+eager        PR 4: idle-queue opportunistic flush — the
+                        partial decode tile is dispatched whenever the
+                        consumer would otherwise block on the hand-off
+                        queue (``ReadPolicy.eager_flush``)
 
-and writes the machine-readable ``BENCH_e2e.json`` next to the CSV so the
-perf trajectory is tracked across PRs.
+plus the PR 4 headline: a MULTI-TENANT scenario — N distinct images from
+multiple tenants cold-started M-ways concurrently over ONE shared
+``ImageService`` (shared L1, shared limiters, per-tenant scoped
+telemetry), byte-identical to the per-image serial oracles, with
+cross-tenant L1 dedup hits observable in the tenant scopes (Fig 5's
+cross-customer dedup story).
+
+Everything lands in the machine-readable ``BENCH_e2e.json`` next to the
+CSV so the perf trajectory is tracked across PRs.
 
 Run directly with ``--smoke`` for the fast tier-1 end-to-end exercise of
-the streamed path (used by ``scripts/test.sh``): a small image, real
-origin delay, streamed vs staged vs serial byte-identity plus an overlap
-report, in a few seconds."""
+the streamed path (used by ``scripts/test.sh`` and ``make verify``): a
+small image, real origin delay, streamed vs staged vs serial byte
+identity, a shared-service multi-tenant identity check, and hard
+regression gates (non-zero exit on failure), in a few seconds."""
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -36,6 +48,7 @@ from repro.core.cache.distributed import DistributedCache
 from repro.core.decode import BatchDecoder
 from repro.core.gc import GenerationalGC
 from repro.core.loader import ImageReader, create_image
+from repro.core.service import ImageService, ReadPolicy, ServiceConfig
 from repro.core.store import ChunkStore
 from repro.core.telemetry import COUNTERS
 
@@ -45,40 +58,47 @@ PARALLELISM = 8
 BENCH_JSON = os.environ.get("BENCH_E2E_JSON", "BENCH_e2e.json")
 
 
+def _cold_service(store, backend: str = "numpy",
+                  rtt_s: float = ORIGIN_RTT_S) -> ImageService:
+    """A fresh single-process service with its own cold L1 (so repeated
+    chunk names cost one origin RTT per config — the trajectory isolates
+    pipelining + batch decode, not name dedup)."""
+    return ImageService(store, ServiceConfig(
+        l1_bytes=64 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0, origin_delay_s=rtt_s, decode_backend=backend))
+
+
 def restore_pipeline_configs(store, blob, key) -> dict:
-    """Cold restore wall clock across the three pipeline configs,
-    byte-identity enforced between all of them.
+    """Cold restore wall clock across the five pipeline configs,
+    byte-identity enforced between all of them."""
 
-    Every reader gets its own cold L1 so repeated chunk names cost one
-    origin RTT on every path — the metric isolates pipelining + batch
-    decode (§2.2), not name dedup."""
-    from repro.core.cache.local import LocalCache
-
-    def run(tag, batched, decoder=None, streamed=False):
-        r = ImageReader(blob, key, store, origin_delay_s=ORIGIN_RTT_S,
-                        l1=LocalCache(64 << 20, name=f"svb_{tag}"),
-                        decoder=decoder)
+    def run(tag, mode, backend="numpy", eager=False):
+        svc = _cold_service(store, backend)
+        h = svc.open(blob, key, tenant=f"svb_{tag}")
+        pol = ReadPolicy(mode=mode, parallelism=PARALLELISM,
+                         decode_backend=backend, eager_flush=eager)
         t0 = time.perf_counter()
-        flat = r.restore_tree(batched=batched, parallelism=PARALLELISM,
-                              streamed=streamed)
-        return flat, time.perf_counter() - t0, r.reader.last_batch
+        flat = h.restore_tree(policy=pol)
+        return flat, time.perf_counter() - t0, h.reader.last_batch
 
-    flat_serial, t_serial, _ = run("serial", batched=False)
-    flat_pr1, t_pr1, lb_pr1 = run("pr1", True, BatchDecoder("serial"))
-    flat_now, t_now, lb_now = run("now", True, BatchDecoder("numpy"))
-    flat_str, t_str, lb_str = run("stream", True, BatchDecoder("numpy"),
-                                  streamed=True)
+    flat_serial, t_serial, _ = run("serial", "serial")
+    flat_pr1, t_pr1, lb_pr1 = run("pr1", "staged", backend="serial")
+    flat_now, t_now, lb_now = run("now", "staged")
+    flat_str, t_str, lb_str = run("stream", "streamed")
+    flat_egr, t_egr, lb_egr = run("eager", "streamed", eager=True)
     for n in flat_serial:
         assert np.array_equal(flat_serial[n], flat_pr1[n]) and \
             np.array_equal(flat_serial[n], flat_now[n]) and \
-            np.array_equal(flat_serial[n], flat_str[n]), \
+            np.array_equal(flat_serial[n], flat_str[n]) and \
+            np.array_equal(flat_serial[n], flat_egr[n]), \
             f"batched restore diverged on {n}"
 
     # controlled decode-stage comparison: the SAME fetched ciphertext
     # batch through each decoder, best of 3 (decode is pure, so this
     # isolates the stage from fetch jitter)
-    rd = ImageReader(blob, key, store,
-                     l1=LocalCache(64 << 20, name="svb_dec")).reader
+    rd = ImageService(store, ServiceConfig(
+        l1_bytes=64 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0)).open(blob, key, tenant="svb_dec").reader
     fb = rd.fetch_ciphertexts(range(len(rd.m.chunks)))
     refs = [rd._refs[v[0]] for v in fb.by_name.values()]
     dec_s, dec_b = BatchDecoder("serial"), BatchDecoder("numpy")
@@ -97,6 +117,11 @@ def restore_pipeline_configs(store, blob, key) -> dict:
         "batched_fetch_s": t_pr1,
         "batched_fetch_decode_s": t_now,
         "streamed_restore_s": t_str,
+        "streamed_eager_restore_s": t_egr,
+        "eager_flushes": lb_egr["eager_flushes"],
+        "eager_decode_tiles": lb_egr["decode_tiles"],
+        "eager_overlap_s": lb_egr["overlap_s"],
+        "eager_speedup_vs_streamed": t_str / t_egr,
         "decode_serial_s": d_serial,
         "decode_batched_s": d_batched,
         "decode_serial_in_restore_s": lb_pr1["decode_wall_s"],
@@ -104,6 +129,7 @@ def restore_pipeline_configs(store, blob, key) -> dict:
         "fetch_wall_s": lb_now["fetch_wall_s"],
         "streamed_fetch_wall_s": lb_str["fetch_wall_s"],
         "streamed_decode_busy_s": lb_str["decode_wall_s"],
+        "streamed_decode_tiles": lb_str["decode_tiles"],
         "overlap_s": lb_str["overlap_s"],
         "overlap_fraction": lb_str["overlap_fraction"],
         "queue_hwm": lb_str["queue_hwm"],
@@ -114,6 +140,153 @@ def restore_pipeline_configs(store, blob, key) -> dict:
         "decode_speedup": d_serial / max(d_batched, 1e-12),
         "sim_speedup": lb_now["sim_serial_s"] /
         max(lb_now["sim_pipelined_s"], 1e-12),
+    }
+
+
+def build_tenant_images(store, root, *, chunk_size=4096, rows=24,
+                        seed=7) -> tuple:
+    """N images from 2 tenants sharing a base (the paper's cross-customer
+    layer reuse): tenant A owns two fine-tunes of one base, tenant B owns
+    a third image reusing the SAME base bytes — convergent encryption
+    gives identical chunk names across tenants, so one tenant's fetch
+    warms the other's reads."""
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((rows, 1024)).astype(np.float32)
+    specs = [
+        ("tenantA", b"A" * 32, {"base": base,
+                                "delta": rng.standard_normal((2, 1024)).astype(np.float32)}),
+        ("tenantA", b"A" * 32, {"base": base,
+                                "delta": rng.standard_normal((3, 1024)).astype(np.float32)}),
+        ("tenantB", b"B" * 32, {"base": base,
+                                "delta": rng.standard_normal((2, 1024)).astype(np.float32)}),
+    ]
+    images = []
+    for i, (tenant, key, tree) in enumerate(specs):
+        blob, stats = create_image(tree, tenant=tenant, tenant_key=key,
+                                   store=store, root=root,
+                                   chunk_size=chunk_size,
+                                   image_id=f"mt{i}")
+        images.append((tenant, key, tree, blob, stats))
+    return images
+
+
+def _concurrent_wave(service, images, oracles, job_idxs,
+                     parallelism) -> float:
+    """Restore `job_idxs` (image indices, with repeats = stampeding
+    replicas) concurrently through the shared `service`, assert byte
+    identity of every result against its per-image oracle, return the
+    wave wall-clock."""
+    results: dict = {}
+    errs: list = []
+    barrier = threading.Barrier(len(job_idxs))
+
+    def work(slot, img_idx):
+        try:
+            tenant, key, _tree, blob, _ = images[img_idx]
+            barrier.wait()
+            with service.admission_slot():
+                h = service.open(blob, key)
+                results[slot] = (img_idx, h.restore_tree(
+                    policy=ReadPolicy(parallelism=parallelism)))
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(s, i))
+               for s, i in enumerate(job_idxs)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert not errs, errs
+    assert len(results) == len(job_idxs)
+    for _slot, (img_idx, flat) in results.items():
+        oracle = oracles[img_idx]
+        for n in oracle:
+            assert np.array_equal(flat[n], oracle[n]), \
+                f"multi-tenant restore diverged: image {img_idx} tensor {n}"
+    return wall
+
+
+def multi_tenant_scenario(store, root, *, concurrency_per_image=2,
+                          rtt_s=4e-3, parallelism=PARALLELISM) -> dict:
+    """The redesign's headline scenario: N distinct images from multiple
+    tenants, M concurrent cold restores over ONE shared ImageService.
+
+    Three waves make the shared-infrastructure effects attributable:
+
+      1. tenantA's images cold-start concurrently (warming the shared L1
+         with the cross-tenant base chunks);
+      2. ONE cold tenantB restore — every L1 hit in tenantB's telemetry
+         scope is therefore a CROSS-tenant dedup hit (tenantB never
+         fetched the base; convergent chunk names make A's bytes serve
+         B's reads — the Fig 5 story);
+      3. the full M-way concurrent wave over all images and tenants (the
+         scale proof: byte identity under stampede, wall clock, origin
+         traffic bounded by the unique chunk union).
+    """
+    images = build_tenant_images(store, root)
+    # per-image serial oracles through private cold readers
+    oracles = []
+    for tenant, key, tree, blob, _ in images:
+        o = ImageReader(blob, key, store).restore_tree(batched=False)
+        for n in tree:
+            assert np.array_equal(o[n], np.asarray(tree[n])), n
+        oracles.append(o)
+
+    a_imgs = [i for i, (t, *_x) in enumerate(images) if t == "tenantA"]
+    b_imgs = [i for i, (t, *_x) in enumerate(images) if t == "tenantB"]
+    service = ImageService(store, ServiceConfig(
+        l1_bytes=128 << 20, l2_nodes=0, fetch_concurrency=16,
+        max_coldstarts=2 * len(images) * concurrency_per_image,
+        origin_delay_s=rtt_s))
+    before = COUNTERS.snapshot()
+
+    # wave 1: tenantA concurrent cold-starts warm the shared tiers
+    _concurrent_wave(service, images, oracles,
+                     a_imgs * concurrency_per_image, parallelism)
+    b_mark = COUNTERS.snapshot()
+    # wave 2: one cold tenantB restore — its scoped L1 hits are
+    # cross-tenant by construction
+    _concurrent_wave(service, images, oracles, b_imgs, parallelism)
+    after_b = COUNTERS.snapshot()
+    cross = after_b.get("tenant.tenantB::read.l1_hits", 0.0) - \
+        b_mark.get("tenant.tenantB::read.l1_hits", 0.0)
+    # wave 3: the full M-way multi-tenant stampede (everything warm now —
+    # this wave measures concurrent-session wall clock, not origin depth)
+    jobs = [i for i in range(len(images))
+            for _ in range(concurrency_per_image)]
+    wall = _concurrent_wave(service, images, oracles, jobs, parallelism)
+
+    after = COUNTERS.snapshot()
+
+    def delta(name):
+        return after.get(name, 0.0) - before.get(name, 0.0)
+
+    # store-level PUT-if-absent dedup makes Σ unique_chunks exactly the
+    # unique chunk-name union across the N images
+    unique_union = sum(s.unique_chunks for *_x, s in images)
+    naive = sum((s.total_chunks - s.zero_chunks) * concurrency_per_image
+                for *_x, s in images)
+    tenants = sorted({t for t, *_x in images})
+    per_tenant = {
+        t: {name: delta(f"tenant.{t}::{name}")
+            for name in ("read.l1_hits", "read.origin_fetches",
+                         "read.singleflight_dedup", "read.batched_chunks")}
+        for t in tenants}
+    return {
+        "images": len(images),
+        "tenants": len(tenants),
+        "concurrent_restores": len(jobs),
+        "origin_rtt_s": rtt_s,
+        "wall_s": wall,
+        "origin_fetches": delta("read.origin_fetches"),
+        "unique_chunks": unique_union,
+        "naive_chunk_fetches": naive,
+        "origin_traffic_fraction": delta("read.origin_fetches") / max(1, naive),
+        "cross_tenant_l1_hits": cross,
+        "per_tenant": per_tenant,
     }
 
 
@@ -138,6 +311,8 @@ def run() -> list:
     origin_mode = lat[lat >= 20000]
     n = len(lat)
     svb = restore_pipeline_configs(store, pop.blobs[0], pop.tenant_key)
+    mt = multi_tenant_scenario(store, gc.active)
+    svb["multi_tenant"] = mt
     with open(BENCH_JSON, "w") as f:
         json.dump(svb, f, indent=2, sort_keys=True)
     return [
@@ -157,11 +332,25 @@ def run() -> list:
                      f"hidden under fetch (overlap fraction "
                      f"{svb['overlap_fraction']:.2f}, queue hwm "
                      f"{svb['queue_hwm']})"),
-        dict(name="e2e.decode_speedup", value=svb["decode_speedup"],
-             derived=f"decode stage: {svb['decode_serial_s']*1e3:.1f}ms "
-                     f"per-chunk caller-thread (PR 1) -> "
-                     f"{svb['decode_batched_s']*1e3:.1f}ms one batched "
-                     f"verify+decrypt pass"),
+        dict(name="e2e.eager_flush_speedup_vs_streamed",
+             value=svb["eager_speedup_vs_streamed"],
+             derived=f"idle-queue opportunistic flush: "
+                     f"{svb['streamed_eager_restore_s']*1e3:.0f}ms vs "
+                     f"{svb['streamed_restore_s']*1e3:.0f}ms plain streamed "
+                     f"({svb['eager_flushes']:.0f} eager flushes, "
+                     f"{svb['eager_decode_tiles']:.0f} tiles vs "
+                     f"{svb['streamed_decode_tiles']:.0f})"),
+        dict(name="e2e.multitenant_concurrent_restores",
+             value=mt["concurrent_restores"],
+             derived=f"{mt['images']} images / {mt['tenants']} tenants over "
+                     f"ONE shared ImageService: {mt['concurrent_restores']} "
+                     f"concurrent cold restores in {mt['wall_s']*1e3:.0f}ms, "
+                     f"byte-identical to per-image serial oracles; origin "
+                     f"fetched {mt['origin_fetches']:.0f} of "
+                     f"{mt['naive_chunk_fetches']:.0f} naive chunk gets "
+                     f"(unique union {mt['unique_chunks']}); cross-tenant "
+                     f"L1 dedup hits {mt['cross_tenant_l1_hits']:.0f} "
+                     f"(tenantB scope)"),
         dict(name="e2e.l1_mode_p50_us",
              value=float(np.median(l1_mode)) if len(l1_mode) else 0.0,
              derived=f"mode freq {len(l1_mode)/n:.3f}; paper: <100us mode, ~0.67 freq"),
@@ -177,44 +366,78 @@ def run() -> list:
 
 
 def smoke(chunks: int = 24, rtt_s: float = 0.004) -> None:
-    """Fast tier-1 smoke (scripts/test.sh): drive the STREAMED restore
-    end-to-end against the serial and staged oracles on a small image
-    with a real injected origin delay, assert byte identity, and print
-    one overlap line. Raises on any divergence."""
-    from repro.core.cache.local import LocalCache
+    """Fast tier-1 smoke (scripts/test.sh, make verify): drive the
+    STREAMED restore end-to-end against the serial and staged oracles on
+    a small image with a real injected origin delay, run the shared-
+    service multi-tenant scenario, and FAIL FAST (non-zero exit) on any
+    byte divergence or perf regression instead of just printing."""
+    import sys
 
     store = ChunkStore(tempfile.mkdtemp(prefix="repro-smoke-"))
     gc = GenerationalGC(store)
     rng = np.random.default_rng(0)
     tree = {"w": rng.standard_normal((chunks * 1024,)).astype(np.float32)}
-    blob, stats = create_image(tree, tenant="smoke", tenant_key=b"K" * 32,
-                               store=store, root=gc.active, chunk_size=4096)
     key = b"K" * 32
+    blob, stats = create_image(tree, tenant="smoke", tenant_key=key,
+                               store=store, root=gc.active, chunk_size=4096)
 
-    serial = ImageReader(blob, key, store, origin_delay_s=rtt_s,
-                         l1=LocalCache(8 << 20, name="smk_ser")
-                         ).restore_tree(batched=False)
-    # small tiles so several flush (and decode) while fetch is in flight
-    staged = ImageReader(blob, key, store, origin_delay_s=rtt_s,
-                         l1=LocalCache(8 << 20, name="smk_stg"),
-                         decoder=BatchDecoder("numpy", max_batch_bytes=16 << 10)
-                         ).restore_tree(streamed=False)
-    r = ImageReader(blob, key, store, origin_delay_s=rtt_s,
-                    l1=LocalCache(8 << 20, name="smk_str"),
-                    decoder=BatchDecoder("numpy", max_batch_bytes=16 << 10))
+    def svc(backend="numpy", mbb=16 << 10):
+        s = ImageService(store, ServiceConfig(
+            l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+            max_coldstarts=0, origin_delay_s=rtt_s,
+            max_batch_bytes=mbb, decode_backend=backend))
+        return s.open(blob, key)
+
     t0 = time.perf_counter()
-    streamed = r.restore_tree(streamed=True)
-    t_str = time.perf_counter() - t0
+    serial = svc().restore_tree(policy=ReadPolicy(mode="serial"))
+    t_serial = time.perf_counter() - t0
+    # small tiles so several flush (and decode) while fetch is in flight
+    staged = svc().restore_tree(policy=ReadPolicy(mode="staged"))
+    failures = []
+    # best of 2: the first streamed pass absorbs one-time pool spin-up
+    # and the first batched-AES table build, which are not the pipeline
+    # effect this smoke gates on
+    t_str, lb = float("inf"), None
+    for _ in range(2):
+        h = svc()
+        t0 = time.perf_counter()
+        streamed = h.restore_tree(policy=ReadPolicy(mode="streamed"))
+        t_run = time.perf_counter() - t0
+        if t_run < t_str:
+            t_str, lb = t_run, h.reader.last_batch
     for n in serial:
-        assert np.array_equal(serial[n], streamed[n]), f"streamed != serial: {n}"
-        assert np.array_equal(serial[n], staged[n]), f"staged != serial: {n}"
-    lb = r.reader.last_batch
-    assert lb["streamed"] is True and lb["queue_hwm"] <= lb["queue_depth"]
+        if not np.array_equal(serial[n], streamed[n]):
+            failures.append(f"streamed != serial: {n}")
+        if not np.array_equal(serial[n], staged[n]):
+            failures.append(f"staged != serial: {n}")
+    if not (lb["streamed"] is True and lb["queue_hwm"] <= lb["queue_depth"]):
+        failures.append(f"stream invariants violated: {lb}")
+    # perf regression gate: the streamed pipeline must beat the serial
+    # oracle (which pays one real RTT per chunk sequentially) by a
+    # margin wide enough to stay unflaky on a loaded 2-core box
+    if t_str >= t_serial * 0.75:
+        failures.append(f"streamed restore regressed: {t_str*1e3:.0f}ms vs "
+                        f"{t_serial*1e3:.0f}ms serial (gate: 0.75x)")
+
+    # multi-tenant shared-service identity (the PR 4 subsystem)
+    mt = multi_tenant_scenario(store, gc.active, rtt_s=rtt_s)
+    if mt["cross_tenant_l1_hits"] <= 0:
+        failures.append("no cross-tenant L1 dedup hits observed in scoped "
+                        "telemetry")
+    if failures:
+        print("SMOKE REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
     print(f"SMOKE OK: streamed restore of {lb['chunks']} chunks in "
           f"{t_str*1e3:.0f}ms (fetch {lb['fetch_wall_s']*1e3:.0f}ms, decode "
           f"busy {lb['decode_wall_s']*1e3:.1f}ms, overlap "
           f"{lb['overlap_s']*1e3:.1f}ms, queue hwm {lb['queue_hwm']}/"
-          f"{lb['queue_depth']}); byte-identical to serial + staged oracles")
+          f"{lb['queue_depth']}); byte-identical to serial + staged oracles; "
+          f"multi-tenant: {mt['concurrent_restores']} concurrent restores of "
+          f"{mt['images']} images/{mt['tenants']} tenants in "
+          f"{mt['wall_s']*1e3:.0f}ms, {mt['cross_tenant_l1_hits']:.0f} "
+          f"cross-tenant L1 hits")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
 """Serve a fleet of fine-tunes from one base model — the paper's
 multi-tenant story mapped to model serving.
 
-Ten fine-tunes share a base; each replica cold-starts by demand-loading
-its image through L1/L2/origin. The chunk store deduplicates the base
-weights so the fleet's data movement is bounded by unique bytes, and the
-erasure-coded L2 keeps cold-start tails flat even with a failed node.
+Ten fine-tunes (one tenant each) share a base; every replica cold-starts
+through ONE shared ``ImageService`` — shared L1, erasure-coded L2,
+admission control, and per-tenant scoped telemetry. The chunk store
+deduplicates the base weights so the fleet's data movement is bounded by
+unique bytes (each tenant's scoped counters show the cross-tenant L1
+hits), and the L2 keeps cold-start tails flat even with a failed node.
 
 Run: PYTHONPATH=src python examples/serve_finetunes.py
 """
@@ -16,10 +18,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.cache.distributed import DistributedCache
-from repro.core.cache.local import LocalCache
-from repro.core.concurrency import RejectingLimiter
 from repro.core.gc import GenerationalGC
 from repro.core.loader import create_image
+from repro.core.service import ImageService, ServiceConfig
 from repro.core.store import ChunkStore
 from repro.core.telemetry import COUNTERS
 from repro.models import build_model
@@ -52,31 +53,36 @@ def main():
               f"({s.unique_fraction:5.1%} unique)")
 
     l2 = DistributedCache(num_nodes=6, seed=1)
-    lim = RejectingLimiter(4)
+    # one shared service for the whole fleet: shared L1, the injected
+    # L2, admission control, per-tenant telemetry scopes
+    service = ImageService(store, ServiceConfig(
+        l1_bytes=64 << 20, max_coldstarts=4, fetch_concurrency=16), l2=l2)
     victim_node = sorted(l2.nodes)[0]
 
-    print(f"== cold-starting 10 replicas (node {victim_node} failed "
-          f"after the 3rd start) ==")
+    print(f"== cold-starting 10 replicas over ONE shared ImageService "
+          f"(node {victim_node} failed after the 3rd start) ==")
     for i, blob in enumerate(blobs):
         if i == 3:
             l2.fail_node(victim_node)   # erasure coding must hide this
-        l1 = LocalCache(64 << 20, name=f"worker{i % 4}")
         t0 = time.time()
-        eng, stats = cold_start(model, blob, b"%02d" % i * 16, store,
-                                l1=l1, l2=l2, limiter=lim,
+        eng, stats = cold_start(model, blob, b"%02d" % i * 16, service,
                                 max_batch=2, max_len=32)
         req = Request(0, prompt=[11, 22, 33], max_new=4)
         eng.submit(req)
         eng.run_until_drained()
-        print(f"   replica {i}: load {stats['load_seconds']*1e3:6.0f}ms  "
+        scoped = service.tenant_counters(stats["tenant"])
+        print(f"   replica {i} [{stats['tenant']}]: "
+              f"load {stats['load_seconds']*1e3:6.0f}ms  "
               f"origin_fetches={stats['origin_fetches']:3.0f}  "
+              f"cross-tenant L1 hits={scoped.get('read.l1_hits'):4.0f}  "
               f"tokens={req.out}")
     print(f"== fleet stats ==")
     snap = COUNTERS.snapshot()
     print(f"   chunks uploaded once: {snap.get('store.chunks_uploaded', 0):.0f}; "
           f"dedup hits at creation: {snap.get('store.dedup_hits', 0):.0f}")
-    print(f"   L2 hit rate {l2.hit_rate:.3f} with one node down "
-          f"(constant-work 4-of-5 reads)")
+    print(f"   shared L1 hit rate {service.l1.hit_rate:.3f}; L2 hit rate "
+          f"{l2.hit_rate:.3f} with one node down (the shared L1 absorbs "
+          f"the fleet once warm; L2 serves L1-evicted reads 4-of-5)")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,26 @@
 #!/usr/bin/env bash
-# Tier-1 test suite, one command from a fresh clone, fully offline:
-# sets PYTHONPATH=src and runs pytest, then a fast benchmark smoke that
-# drives the streamed restore path end-to-end (byte-identity vs the
-# serial + staged oracles). `hypothesis` is optional — when absent,
-# tests/conftest.py swaps in the vendored deterministic stub.
+# Tier-1 verification, one command from a fresh clone, fully offline:
+# sets PYTHONPATH=src and runs pytest, then the benchmark smoke that
+# drives the streamed restore + the shared-service multi-tenant scenario
+# end-to-end. The smoke FAILS (non-zero exit) on byte divergence from
+# the serial/staged oracles, on missing cross-tenant dedup telemetry,
+# or on a streamed-vs-serial perf regression — so `make verify` / CI
+# stop on benchmark-smoke regressions instead of just printing them.
+# `hypothesis` is optional — when absent, tests/conftest.py swaps in the
+# vendored deterministic stub.
 #
-#   scripts/test.sh              # whole suite (-x -q) + streamed smoke
+#   scripts/test.sh              # whole suite (-x -q) + smoke gates
 #   scripts/test.sh tests/test_cache.py -k lru   # any pytest args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "$#" -eq 0 ]; then
     python -m pytest -x -q tests
-    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-        python benchmarks/e2e_read_latency.py --smoke
+    if ! PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/e2e_read_latency.py --smoke; then
+        echo "FAIL: benchmark smoke regression (see SMOKE REGRESSION above)" >&2
+        exit 1
+    fi
     exit 0
 fi
 exec python -m pytest -x -q "$@"

@@ -8,4 +8,11 @@ from repro.core.gc import GenerationalGC  # noqa: F401
 from repro.core.layout import CHUNK_SIZE, build_layout  # noqa: F401
 from repro.core.loader import ImageReader, create_image  # noqa: F401
 from repro.core.manifest import Manifest, open_manifest, read_public, seal  # noqa: F401
+from repro.core.service import (  # noqa: F401
+    ColdStartRejected,
+    ImageHandle,
+    ImageService,
+    ReadPolicy,
+    ServiceConfig,
+)
 from repro.core.store import ChunkStore  # noqa: F401

@@ -123,6 +123,26 @@ class _Flight:
         self.error = None
 
 
+class FlightTable:
+    """Shared single-flight registry: (root, chunk name) -> in-flight
+    fetch.
+
+    Chunk names are content addresses, so one table can serve MANY
+    readers — an ``ImageService`` passes one table to every reader it
+    builds, making a stampede on the same chunk from different images
+    (or different tenants: convergent encryption gives them the same
+    names) cost ONE origin fetch process-wide, not one per reader.
+    Keys include the reader's root: origin fetches are root-addressed,
+    and a leader's root-specific failure (e.g. an expired root mid-GC)
+    must not poison a follower reading the same name from a live root."""
+
+    __slots__ = ("lock", "flights")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.flights: dict[tuple, _Flight] = {}
+
+
 class FetchedBatch:
     """Output of the fetch-I/O stage (stage F), input to the decode
     stage (stage D): ciphertexts + per-name simulated latencies, with
@@ -147,7 +167,8 @@ class FetchedBatch:
 class TieredReader:
     def __init__(self, manifest: Manifest, store, root: str | None = None,
                  l1=None, l2=None, concurrency=None,
-                 origin_delay_s: float = 0.0, decoder: BatchDecoder | None = None):
+                 origin_delay_s: float = 0.0, decoder: BatchDecoder | None = None,
+                 counters=None, flights: FlightTable | None = None):
         self.m = manifest
         self.store = store
         self.root = root or manifest.root_id
@@ -156,12 +177,20 @@ class TieredReader:
         self.concurrency = concurrency
         self.origin_delay_s = origin_delay_s
         self.decoder = decoder if decoder is not None else BatchDecoder()
+        # `counters`: a Counters-compatible sink (e.g. a per-tenant
+        # ScopedCounters from ImageService) — the multi-tenant read path
+        # attributes this reader's fetch activity without forking the
+        # global totals
+        self.counters = counters if counters is not None else COUNTERS
         self.read_lat = LatencyRecorder("e2e.read")
         self.batch_lat = LatencyRecorder("e2e.read_batch")
         self.last_batch: dict = {}
         self._refs = {c.index: c for c in manifest.chunks}
-        self._flights: dict[str, _Flight] = {}
-        self._flight_lock = threading.Lock()
+        # single-flight state; a shared FlightTable (service-wide) dedups
+        # stampedes ACROSS readers, the private default within one
+        table = flights if flights is not None else FlightTable()
+        self._flights = table.flights
+        self._flight_lock = table.lock
         # long-lived fetch pool, grown on demand: spawning a pool per
         # batch would put thread start/join on the demand-paging hot path
         self._fetch_pool = LazyPool()
@@ -175,16 +204,16 @@ class TieredReader:
         """(ciphertext, simulated latency) of `ref` via L2 -> origin,
         single-flighted by chunk name. L1 is probed by callers."""
         with self._flight_lock:
-            flight = self._flights.get(ref.name)
+            flight = self._flights.get((self.root, ref.name))
             if flight is None:
                 flight = _Flight()
-                self._flights[ref.name] = flight
+                self._flights[(self.root, ref.name)] = flight
                 leader = True
             else:
                 leader = False
         if not leader:
             flight.event.wait()
-            COUNTERS.inc("read.singleflight_dedup")
+            self.counters.inc("read.singleflight_dedup")
             if flight.error is not None:
                 raise flight.error
             return flight.ciphertext, flight.sim_lat
@@ -211,7 +240,7 @@ class TieredReader:
                         time.sleep(self.origin_delay_s)
                     ct = self.store.get_chunk(self.root, ref.name)
                 lat += ORIGIN_LAT_S
-                COUNTERS.inc("read.origin_fetches")
+                self.counters.inc("read.origin_fetches")
                 if self.l2 is not None:
                     self.l2.put_chunk(ref.name, ct)
                 if self.l1 is not None:
@@ -224,7 +253,7 @@ class TieredReader:
             raise
         finally:
             with self._flight_lock:
-                self._flights.pop(ref.name, None)
+                self._flights.pop((self.root, ref.name), None)
             flight.event.set()
 
     def fetch_chunk(self, index: int) -> bytes:
@@ -232,13 +261,15 @@ class TieredReader:
         ref = self._refs[index]
         cs = self.m.chunk_size
         if ref.name == ZERO_CHUNK:
-            COUNTERS.inc("read.zero_chunks")
+            self.counters.inc("read.zero_chunks")
             return b"\x00" * cs
         lat = 0.0
         ct = None
         if self.l1 is not None:
             ct = self.l1.get(ref.name)
             lat += L1_PROBE_S
+            if ct is not None:
+                self.counters.inc("read.l1_hits")
         if ct is None:
             ct, fetch_lat = self._fetch_cipher(ref)
             lat += fetch_lat
@@ -272,7 +303,7 @@ class TieredReader:
         for i in sorted(set(int(i) for i in indices)):
             ref = self._refs[i]
             if ref.name == ZERO_CHUNK:
-                COUNTERS.inc("read.zero_chunks")
+                self.counters.inc("read.zero_chunks")
                 fb.zero_indices.append(i)
             else:
                 fb.by_name.setdefault(ref.name, []).append(i)
@@ -285,6 +316,7 @@ class TieredReader:
                     fb.ciphertexts[name] = ct
                     fb.lats[name] = L1_PROBE_S
                     fb.l1_hits += 1
+                    self.counters.inc("read.l1_hits")
                     self.read_lat.record(L1_PROBE_S)
                     if fb.sink is not None:
                         fb.sink.put((name, ct))
@@ -295,10 +327,10 @@ class TieredReader:
         lead, follow = [], {}
         with self._flight_lock:
             for name in miss:
-                flight = self._flights.get(name)
+                flight = self._flights.get((self.root, name))
                 if flight is None:
                     flight = _Flight()
-                    self._flights[name] = flight
+                    self._flights[(self.root, name)] = flight
                     lead.append((name, flight))
                 else:
                     follow[name] = flight
@@ -306,7 +338,7 @@ class TieredReader:
             self._fetch_leaders(lead, parallelism, fb)
         for name, flight in follow.items():
             flight.event.wait()
-            COUNTERS.inc("read.singleflight_dedup")
+            self.counters.inc("read.singleflight_dedup")
             if flight.error is not None:
                 raise flight.error
             fb.ciphertexts[name] = flight.ciphertext
@@ -321,7 +353,7 @@ class TieredReader:
         flight.ciphertext = ct
         flight.sim_lat = lat
         with self._flight_lock:
-            self._flights.pop(name, None)
+            self._flights.pop((self.root, name), None)
         flight.event.set()
         fb.ciphertexts[name] = ct
         fb.lats[name] = lat
@@ -335,7 +367,7 @@ class TieredReader:
     def _poison_flight(self, name: str, flight: _Flight, error: Exception):
         flight.error = error
         with self._flight_lock:
-            self._flights.pop(name, None)
+            self._flights.pop((self.root, name), None)
         flight.event.set()
 
     def _fetch_leaders(self, lead: list, parallelism: int, fb: FetchedBatch):
@@ -417,7 +449,7 @@ class TieredReader:
                 if self.origin_delay_s > 0:
                     time.sleep(self.origin_delay_s)
                 ct = self.store.get_chunk(self.root, name)
-            COUNTERS.inc("read.origin_fetches")
+            self.counters.inc("read.origin_fetches")
             if self.l2 is not None:
                 self.l2.put_chunk(name, ct)
             if self.l1 is not None:
@@ -490,10 +522,13 @@ class TieredReader:
 
     def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
                      materialize: bool = True, streamed: bool = False,
-                     queue_depth: int = DEFAULT_QUEUE_DEPTH) -> dict:
+                     queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                     decoder: BatchDecoder | None = None) -> dict:
         """Batched read: {index: plaintext} for a deduplicated chunk set
         — ``fetch_ciphertexts`` (stage F) then one batched decode
-        (stage D) on the caller thread via ``self.decoder``.
+        (stage D) on the caller thread via ``decoder`` (default
+        ``self.decoder``; a ``ReadPolicy`` with decode overrides passes
+        its own).
 
         With ``streamed=True`` the two stages run concurrently instead
         of back-to-back: stage F on a producer thread feeding a
@@ -502,12 +537,18 @@ class TieredReader:
         mode, which stays as the selectable oracle.
 
         With ``materialize=False`` (the prefetch path) the decode stage
-        is skipped entirely — tiers are warmed, the returned dict is
-        empty, and memory stays flat for arbitrarily large index sets.
+        is skipped entirely — tiers are warmed and the returned dict is
+        empty. ``streamed=True`` there selects the streaming fetch
+        producer (per-chunk L2 stripe resolution, bounded hand-off)
+        with a discarding consumer, so prefetch exercises the same
+        fetch path the streamed restore will take.
         """
         if streamed and materialize:
             return self.fetch_chunks_streamed(indices, parallelism,
-                                              queue_depth)
+                                              queue_depth, decoder)
+        if streamed:
+            return self._prefetch_streamed(indices, parallelism, queue_depth)
+        dec = decoder if decoder is not None else self.decoder
         t0 = time.perf_counter()
         fb = self.fetch_ciphertexts(indices, parallelism)
         fetch_wall = time.perf_counter() - t0
@@ -521,7 +562,7 @@ class TieredReader:
             if fb.by_name:
                 refs = [self._refs[idxs[0]] for idxs in fb.by_name.values()]
                 try:
-                    plains, decode_wall = self.decoder.decrypt_batch_timed(
+                    plains, decode_wall = dec.decrypt_batch_timed(
                         refs, fb.ciphertexts)
                 except convergent.IntegrityError as e:
                     self._invalidate_bad(e)
@@ -536,7 +577,7 @@ class TieredReader:
         sim_wall = fb.l1_lat + pipelined_latency(fetch_lats, parallelism)
         self.batch_lat.record(sim_wall)
         nchunks = len(fb.zero_indices) + sum(len(v) for v in fb.by_name.values())
-        COUNTERS.add("read.batched_chunks", nchunks)
+        self.counters.add("read.batched_chunks", nchunks)
         self.last_batch = {
             "chunks": nchunks,
             "fetched": len(fb.by_name) - fb.l1_hits,
@@ -546,14 +587,63 @@ class TieredReader:
             "wall_s": time.perf_counter() - t0,
             "fetch_wall_s": fetch_wall,
             "decode_wall_s": decode_wall,
-            "decode_backend": self.decoder.backend,
+            "decode_backend": dec.backend,
             "streamed": False,
         }
         return out
 
+    def _prefetch_streamed(self, indices, parallelism: int,
+                           queue_depth: int) -> dict:
+        """Non-materializing streamed prefetch: the streaming fetch
+        producer warms every tier (per-chunk L2 stripe resolution via
+        ``get_chunks(on_ready=...)``, bounded hand-off backpressure)
+        while this thread discards the ciphertext stream — no decode, no
+        accumulation of plaintexts. Returns {} like the staged prefetch."""
+        t0 = time.perf_counter()
+        q = BoundedQueue(queue_depth)
+        holder: dict = {}
+
+        def produce():
+            try:
+                holder["fb"] = self.fetch_ciphertexts(indices, parallelism,
+                                                      sink=q)
+            except BaseException as e:
+                holder["err"] = e
+                q.poison(e)
+            else:
+                q.close()
+
+        prod = threading.Thread(target=produce, name="prefetch-fetch",
+                                daemon=True)
+        prod.start()
+        try:
+            for _ in q:         # drain: tiers warm, nothing materializes
+                pass
+        except BaseException:
+            q.cancel()          # producer puts now drop; it still warms tiers
+            prod.join()
+            raise
+        prod.join()
+        fb: FetchedBatch = holder["fb"]
+        nchunks = len(fb.zero_indices) + sum(len(v) for v in fb.by_name.values())
+        self.counters.add("read.batched_chunks", nchunks)
+        self.counters.max_update("stream.queue_hwm", q.high_water)
+        self.last_batch = {
+            "chunks": nchunks,
+            "fetched": len(fb.by_name) - fb.l1_hits,
+            "parallelism": int(parallelism),
+            "wall_s": time.perf_counter() - t0,
+            "streamed": True,
+            "materialized": False,
+            "queue_hwm": q.high_water,
+            "queue_depth": q.maxsize,
+        }
+        return {}
+
     def fetch_chunks_streamed(self, indices,
                               parallelism: int = DEFAULT_PARALLELISM,
-                              queue_depth: int = DEFAULT_QUEUE_DEPTH) -> dict:
+                              queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                              decoder: BatchDecoder | None = None) -> dict:
         """Streaming read: stage F runs on a producer thread pushing
         resolved ciphertexts into a ``queue_depth``-bounded queue; stage
         D (``decoder.decrypt_stream``) consumes on this thread, decoding
@@ -564,6 +654,7 @@ class TieredReader:
         hidden under the fetch wall), ``overlap_fraction``, and the
         queue's high-water mark; the same figures feed the
         ``decode.overlap_s`` / ``stream.queue_hwm`` counters."""
+        dec = decoder if decoder is not None else self.decoder
         t0 = time.perf_counter()
         refs_by_name: dict[str, object] = {}
         for i in set(int(i) for i in indices):
@@ -590,7 +681,7 @@ class TieredReader:
                                 daemon=True)
         prod.start()
         try:
-            plains, dstats = self.decoder.decrypt_stream(q, refs_by_name)
+            plains, dstats = dec.decrypt_stream(q, refs_by_name)
         except BaseException as e:
             q.cancel()          # producer puts now drop; it still warms tiers
             prod.join()
@@ -621,9 +712,9 @@ class TieredReader:
         sim_wall = fb.l1_lat + pipelined_latency(fetch_lats, parallelism)
         self.batch_lat.record(sim_wall)
         nchunks = len(fb.zero_indices) + sum(len(v) for v in fb.by_name.values())
-        COUNTERS.add("read.batched_chunks", nchunks)
-        COUNTERS.add("decode.overlap_s", overlap)
-        COUNTERS.max_update("stream.queue_hwm", q.high_water)
+        self.counters.add("read.batched_chunks", nchunks)
+        self.counters.add("decode.overlap_s", overlap)
+        self.counters.max_update("stream.queue_hwm", q.high_water)
         self.last_batch = {
             "chunks": nchunks,
             "fetched": len(fb.by_name) - fb.l1_hits,
@@ -633,13 +724,14 @@ class TieredReader:
             "wall_s": total,
             "fetch_wall_s": fetch_wall,
             "decode_wall_s": busy,
-            "decode_backend": self.decoder.backend,
+            "decode_backend": dec.backend,
             "streamed": True,
             "overlap_s": overlap,
             "overlap_fraction": overlap / busy if busy > 0 else 0.0,
             "queue_hwm": q.high_water,
             "queue_depth": q.maxsize,
             "decode_tiles": dstats["tiles"],
+            "eager_flushes": dstats.get("eager_flushes", 0),
         }
         return out
 
@@ -667,15 +759,19 @@ class TieredReader:
         return self._assemble(offset, length, {})
 
     def read_many(self, ranges, parallelism: int = DEFAULT_PARALLELISM,
-                  streamed: bool = False) -> list:
+                  streamed: bool = False,
+                  queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                  decoder: BatchDecoder | None = None) -> list:
         """Batched read: one `fetch_chunks` over the union chunk set of
         all (offset, length) `ranges` (overlaps deduplicated), then each
         range is assembled from the in-memory chunks. Byte-identical to
         calling `read` per range. ``streamed=True`` overlaps decode with
-        fetch (the default restore path via ``loader``)."""
+        fetch (the default restore path via the service layer);
+        ``decoder`` overrides the decode backend/tiling per call."""
         ranges = list(ranges)
         idxs = ranges_to_chunks(ranges, self.m.chunk_size)
-        chunks = self.fetch_chunks(idxs, parallelism, streamed=streamed)
+        chunks = self.fetch_chunks(idxs, parallelism, streamed=streamed,
+                                   queue_depth=queue_depth, decoder=decoder)
         return [self._assemble(off, ln, chunks) for off, ln in ranges]
 
 

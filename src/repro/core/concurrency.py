@@ -19,7 +19,9 @@ from concurrent.futures import ThreadPoolExecutor
 
 from repro.core.telemetry import COUNTERS
 
-_QUEUE_DONE = object()          # internal end-of-stream sentinel
+QUEUE_DONE = object()           # end-of-stream sentinel (``get``/``try_get``)
+QUEUE_EMPTY = object()          # ``try_get``: nothing queued right now
+_QUEUE_DONE = QUEUE_DONE        # backwards-compat alias
 
 
 class BoundedQueue:
@@ -97,6 +99,22 @@ class BoundedQueue:
             if self._error is not None:
                 raise self._error
             return _QUEUE_DONE
+
+    def try_get(self):
+        """Non-blocking ``get``: an item, ``QUEUE_EMPTY`` when nothing is
+        queued yet (the producer is still running), or ``QUEUE_DONE``
+        once closed and drained. The idle-queue opportunistic flush uses
+        the ``QUEUE_EMPTY`` signal as 'the consumer would block now'."""
+        with self._mu:
+            if self._dq:
+                item = self._dq.popleft()
+                self._not_full.notify()
+                return item
+            if not self._closed:
+                return QUEUE_EMPTY
+            if self._error is not None:
+                raise self._error
+            return QUEUE_DONE
 
     def __iter__(self):
         while True:

@@ -1,26 +1,26 @@
-"""Image create / restore pipeline — the end-to-end paper data path.
+"""Image create pipeline + the deprecated single-image reader shim.
 
 create_image:  pytree -> deterministic layout -> 512KiB chunks -> zero
 elision -> convergent encrypt (salted by epoch+root) -> PUT-if-absent into
 the active root -> sealed manifest. Returns dedup stats (the Fig 5 data).
 
-restore:       manifest -> TieredReader -> tensors on demand. The
-shard-aware variant fetches only the chunks covering this worker's
-parameter shards (the paper's *sparsity* property mapped to SPMD shards).
+restore:       lives in ``repro.core.service`` since the ImageService
+redesign. A process constructs ONE ``ImageService`` (shared L1/L2,
+admission + fetch limiters, decode pool), calls
+``service.open(manifest_blob, tenant_key, root=...)`` per image, and
+reads through the returned ``ImageHandle`` with a single optional
+``ReadPolicy`` (``mode: streamed | staged | serial``, ``parallelism``,
+decode overrides) instead of the scattered ``batched=/streamed=/
+parallelism=`` keywords this module used to take. Streamed reads overlap
+decode with fetch (paper §2.2); staged and serial stay as byte-identity
+oracles.
 
-Restore is *batched and streamed by default*: ``restore_tree`` /
-``restore_shards`` / ``tensor_shard`` compute every byte range they need
-up front and hand the whole set to ``TieredReader.read_many``, which
-coalesces the ranges into one deduplicated chunk set and runs the
-fetch/decode pipeline — all misses fetched through a parallel,
-single-flighted I/O stage that streams each resolved ciphertext into a
-bounded queue, where the decode stage (``core.decode``) verifies and
-decrypts tiles WHILE fetch is still in flight — so cold-start wall clock
-scales with the deepest miss plus only the decode tail, not
-fetch + decode back-to-back (paper §2.2). Pass ``streamed=False`` for
-the staged two-phase pipeline (the byte-identity oracle for streaming)
-or ``batched=False`` (or use ``tensor``) for the fully serial reference
-path.
+``ImageReader`` here is the *deprecation shim* over that API: it builds
+a private single-image service (no shared tiers, no admission control)
+and translates the legacy keywords to ``ReadPolicy``, so pre-redesign
+call sites and byte-identity tests keep working unmodified. New code
+should construct an ``ImageService`` — shared infrastructure is how the
+paper's cross-tenant dedup and admission control happen at all.
 """
 from __future__ import annotations
 
@@ -29,20 +29,16 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import layout as layout_mod
-from repro.core.blockdev import DEFAULT_PARALLELISM, TieredReader
+from repro.core.blockdev import DEFAULT_PARALLELISM
 from repro.core.crypto import convergent
 from repro.core.layout import (
     CHUNK_SIZE,
-    ImageLayout,
     ImageWriter,
     build_layout,
     canonical_paths,
-    ranges_to_chunks,
-    read_tensor,
-    shard_byte_ranges,
 )
-from repro.core.manifest import ZERO_CHUNK, ChunkRef, Manifest, open_manifest, seal
+from repro.core.manifest import ZERO_CHUNK, ChunkRef, Manifest, seal
+from repro.core.service import ReadPolicy, single_image_service
 from repro.core.telemetry import COUNTERS
 
 
@@ -112,7 +108,14 @@ def create_image(tree, *, tenant: str, tenant_key: bytes, store, root: str,
 
 
 class ImageReader:
-    """Demand-loading view over a restored manifest."""
+    """DEPRECATED single-image shim over ``ImageService``/``ImageHandle``.
+
+    Builds a private single-image service (no shared tiers beyond the
+    objects passed in, no admission control) and translates the legacy
+    ``batched=/streamed=/parallelism=`` keywords into ``ReadPolicy``.
+    Kept so pre-redesign call sites and the byte-identity oracles pass
+    unmodified; new code should construct an ``ImageService`` and use
+    ``service.open(...)`` directly."""
 
     def __init__(self, manifest_blob: bytes, tenant_key: bytes, store,
                  l1=None, l2=None, concurrency=None, root: str | None = None,
@@ -122,94 +125,75 @@ class ImageReader:
         # root the image was created in and is baked into the salt).
         # `decoder` selects the batch-decode backend
         # (``core.decode.BatchDecoder``; "serial" is the per-chunk oracle).
-        self.manifest = open_manifest(manifest_blob, tenant_key)
-        self.layout = ImageLayout.from_table(self.manifest.layout_table,
-                                             self.manifest.chunk_size)
-        self.reader = TieredReader(self.manifest, store, root=root,
-                                   l1=l1, l2=l2, concurrency=concurrency,
-                                   origin_delay_s=origin_delay_s,
-                                   decoder=decoder)
+        self._service = single_image_service(
+            store, l1=l1, l2=l2, fetch_limiter=concurrency,
+            origin_delay_s=origin_delay_s)
+        self._handle = self._service.open(manifest_blob, tenant_key,
+                                          root=root, decoder=decoder)
+        self.manifest = self._handle.manifest
+        self.layout = self._handle.layout
+        self.reader = self._handle.reader       # the shared TieredReader
 
     def tensor(self, name: str) -> np.ndarray:
         """Serial restore of one tensor (the reference read path)."""
-        return read_tensor(self.layout, name, self.reader.read)
+        return self._handle.tensor(name)
 
     def tensor_names(self) -> list:
-        return list(self.layout.tensors)
+        return self._handle.tensor_names()
+
+    @staticmethod
+    def _policy(policy, batched, streamed, parallelism) -> ReadPolicy:
+        if policy is not None:
+            return policy
+        return ReadPolicy.from_legacy(batched=batched, streamed=streamed,
+                                      parallelism=parallelism)
 
     def restore_tree(self, names=None, *, batched: bool = True,
                      parallelism: int = DEFAULT_PARALLELISM,
-                     streamed: bool = True) -> dict:
+                     streamed: bool = True,
+                     policy: ReadPolicy | None = None) -> dict:
         """Flat {path: array} for all (or selected) tensors.
 
-        With ``batched`` (default) all tensors' chunks are fetched in one
-        pipelined batch, decode overlapping fetch (``streamed``, the
-        default); ``streamed=False`` selects the staged two-phase
-        pipeline and ``batched=False`` keeps the serial
-        one-chunk-at-a-time loop for comparison."""
-        names = names if names is not None else self.tensor_names()
-        if not batched:
-            return {n: self.tensor(n) for n in names}
-        return self.restore_shards({n: None for n in names},
-                                   parallelism=parallelism,
-                                   streamed=streamed)
+        Legacy keywords map onto ``ReadPolicy`` modes: ``batched``
+        (default) + ``streamed`` (default) is ``mode="streamed"``,
+        ``streamed=False`` is the staged two-phase oracle, and
+        ``batched=False`` the serial one-chunk-at-a-time oracle. A
+        `policy` wins over the keywords."""
+        return self._handle.restore_tree(
+            names, self._policy(policy, batched, streamed, parallelism))
 
     # ------------------------------------------------- shard-aware restore
     def shard_chunks(self, shard_slices: dict) -> list:
         """Chunk indices needed for {tensor_name: [(start, stop) per dim]}."""
-        ranges = []
-        for name, sl in shard_slices.items():
-            t = self.layout.tensors[name]
-            ranges.extend(shard_byte_ranges(t, sl))
-        return ranges_to_chunks(ranges, self.manifest.chunk_size)
+        return self._handle.shard_chunks(shard_slices)
 
     def restore_shards(self, shard_slices: dict, *,
                        parallelism: int = DEFAULT_PARALLELISM,
-                       streamed: bool = True) -> dict:
-        """Batched restore of {name: dim_slices | None (full tensor)}.
-
-        Computes every byte range up front, fetches the union chunk set
-        once via ``read_many`` (streamed fetch→decode overlap by
-        default), then assembles each tensor/shard."""
-        plan = []                       # (name, ranges, out_shape, dtype)
-        all_ranges = []
-        for name, sl in shard_slices.items():
-            t = self.layout.tensors[name]
-            dt = np.dtype(t.dtype)
-            if not t.shape or sl is None:
-                ranges = [(t.offset, t.nbytes)]
-                shape = t.shape
-            else:
-                ranges = shard_byte_ranges(t, sl)
-                shape = tuple(e - s for s, e in sl)
-            plan.append((name, ranges, shape, dt))
-            all_ranges.extend(ranges)
-        bufs = iter(self.reader.read_many(all_ranges, parallelism,
-                                          streamed=streamed))
-        out = {}
-        for name, ranges, shape, dt in plan:
-            raw = b"".join(next(bufs) for _ in ranges)
-            # reshape(()) yields a 0-d array for scalars — identical to
-            # the serial read_tensor path
-            out[name] = np.frombuffer(raw, dt).reshape(shape)
-        return out
+                       streamed: bool = True,
+                       policy: ReadPolicy | None = None) -> dict:
+        """Batched restore of {name: dim_slices | None (full tensor)}."""
+        return self._handle.restore_shards(
+            shard_slices, self._policy(policy, True, streamed, parallelism))
 
     def tensor_shard(self, name: str, dim_slices: list,
                      parallelism: int = DEFAULT_PARALLELISM,
-                     streamed: bool = True) -> np.ndarray:
+                     streamed: bool = True,
+                     policy: ReadPolicy | None = None) -> np.ndarray:
         """Fetch only the bytes of one rectangular shard (batched)."""
-        return self.restore_shards({name: dim_slices},
-                                   parallelism=parallelism,
-                                   streamed=streamed)[name]
+        return self._handle.tensor_shard(
+            name, dim_slices, self._policy(policy, True, streamed,
+                                           parallelism))
 
-    def prefetch(self, chunk_indices: list, parallelism: int = DEFAULT_PARALLELISM):
-        """Concurrently warm the cache tiers for `chunk_indices`.
-
-        Non-materializing: ciphertexts land in L1/L2 but are neither
-        decrypted nor accumulated, so memory stays flat regardless of how
-        much of the image the plan covers."""
-        self.reader.fetch_chunks(chunk_indices, parallelism,
-                                 materialize=False)
+    def prefetch(self, chunk_indices: list,
+                 parallelism: int = DEFAULT_PARALLELISM,
+                 streamed: bool = False,
+                 policy: ReadPolicy | None = None):
+        """Concurrently warm the cache tiers for `chunk_indices`
+        (non-materializing). ``streamed=True`` (or a streamed `policy`)
+        warms through the streaming fetch producer — the same path a
+        streamed restore takes — instead of the staged batch."""
+        self._handle.prefetch(
+            chunk_indices, self._policy(policy, True, streamed, parallelism))
 
 
 def sharding_slices(shape: tuple, spec_sizes: list, coords: list) -> list:

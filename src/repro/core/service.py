@@ -1,0 +1,441 @@
+"""ImageService: the multi-tenant read-path client API (paper Fig 4's
+local agent, process-wide).
+
+The paper's system serves millions of unique workloads over *shared*
+cache/limiter infrastructure: a worker asks its local agent for an
+image; it does not hand-assemble L1/L2/limiters/decoders per call. This
+module is that agent:
+
+* ``ServiceConfig`` — one dataclass holding every process-wide knob
+  (cache tier sizes, admission control, fetch concurrency, decode
+  backend, the default ``ReadPolicy``).
+* ``ImageService`` — constructed ONCE per process from a config (or
+  from pre-built tier objects). Owns the shared L1, the erasure-coded
+  L2, the admission ``RejectingLimiter`` (paper §4.2: reject, don't
+  queue), the origin-fetch ``BlockingLimiter``, the ``BatchDecoder``
+  pool, and a telemetry scope per tenant. Because every image opened
+  through one service shares the L1 by content-addressed chunk name,
+  cross-tenant dedup (Fig 5) happens — and is observable through the
+  per-tenant scoped counters (``service.tenant_counters(t)``).
+* ``ImageHandle`` — a session over one opened image
+  (``service.open(manifest_blob, tenant_key, root=...)``). Its read
+  methods (``restore_tree`` / ``restore_shards`` / ``tensor_shard`` /
+  ``prefetch`` / ``tensor``) take a single optional ``ReadPolicy``
+  instead of the scattered ``batched=/streamed=/parallelism=`` keyword
+  tuple the pre-redesign API threaded through every layer.
+* ``ReadPolicy`` — how one read should run: pipeline ``mode``
+  (``streamed`` | ``staged`` | ``serial``), fetch ``parallelism``,
+  decode tile size / backend overrides, the streamed hand-off queue
+  depth, and the idle-queue opportunistic ``eager_flush``.
+
+Handles of the SAME (image, root, tenant) share one ``TieredReader``,
+so concurrent cold-starts of one image are single-flighted against each
+other — M replicas of a function cost one origin fetch per unique
+chunk, not M (the paper's headline scale property).
+
+``ImageReader`` in ``core.loader`` remains as a thin deprecation shim
+that builds a private single-image service, so the pre-redesign
+byte-identity oracles keep passing unmodified.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import itertools
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.blockdev import (
+    DEFAULT_PARALLELISM,
+    DEFAULT_QUEUE_DEPTH,
+    FlightTable,
+    TieredReader,
+)
+from repro.core.concurrency import BlockingLimiter, RejectingLimiter
+from repro.core.decode import DEFAULT_MAX_BATCH_BYTES, BatchDecoder
+from repro.core.layout import (
+    ImageLayout,
+    ranges_to_chunks,
+    read_tensor,
+    shard_byte_ranges,
+)
+from repro.core.manifest import open_manifest
+from repro.core.telemetry import COUNTERS, ScopedCounters
+
+_MODES = ("streamed", "staged", "serial")
+
+
+class ColdStartRejected(RuntimeError):
+    """Admission control turned the cold start away (paper §4.2: excess
+    starts are rejected, not queued, to bound the demand amplification
+    of an empty cache)."""
+
+
+@dataclass(frozen=True)
+class ReadPolicy:
+    """How ONE read call should run. Replaces the positional knob tuple
+    (``batched=/streamed=/parallelism=/decoder=``) the pre-redesign API
+    threaded through every layer.
+
+    ``mode``:
+      * ``"streamed"`` (default) — fetch streams resolved ciphertexts
+        into a bounded queue; decode tiles run while fetch is in flight.
+      * ``"staged"``   — two-phase fetch-then-decode (the byte-identity
+        oracle for streaming).
+      * ``"serial"``   — per-chunk fetch + per-chunk decrypt (the
+        reference oracle).
+
+    ``parallelism`` — width of the origin fetch pipeline.
+    ``max_batch_bytes`` / ``decode_backend`` — decode-stage overrides
+    (``None`` = the service's configured default).
+    ``queue_depth`` — streamed hand-off queue bound (backpressure).
+    ``eager_flush`` — idle-queue opportunistic flush: decode the partial
+    tile whenever the consumer would otherwise block on the hand-off
+    queue (shrinks the decode tail on small/slow-arriving batches at
+    some tile-efficiency cost). Tri-state: ``None`` inherits the
+    service default, ``True``/``False`` override it either way.
+    """
+
+    mode: str = "streamed"
+    parallelism: int = DEFAULT_PARALLELISM
+    max_batch_bytes: int | None = None
+    decode_backend: str | None = None
+    queue_depth: int = DEFAULT_QUEUE_DEPTH
+    eager_flush: bool | None = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"ReadPolicy.mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+        if self.decode_backend is not None and \
+                self.decode_backend not in ("numpy", "jax", "serial"):
+            raise ValueError(f"unknown decode_backend {self.decode_backend!r}")
+        if self.parallelism < 1:
+            raise ValueError("parallelism must be >= 1")
+
+    # legacy keyword translation (the ImageReader shim)
+    @classmethod
+    def from_legacy(cls, *, batched: bool = True, streamed: bool = True,
+                    parallelism: int = DEFAULT_PARALLELISM) -> "ReadPolicy":
+        mode = "serial" if not batched else ("streamed" if streamed
+                                             else "staged")
+        return cls(mode=mode, parallelism=parallelism)
+
+    @property
+    def streamed(self) -> bool:
+        return self.mode == "streamed"
+
+
+@dataclass
+class ServiceConfig:
+    """Process-wide read-path configuration: everything an
+    ``ImageService`` owns, in one place, instead of a knob tuple
+    threaded through every call site.
+
+    Tier sizing (``l1_bytes=0`` / ``l2_nodes=0`` disables a tier),
+    admission control (``max_coldstarts``; 0 = unlimited), origin fetch
+    concurrency (``fetch_concurrency``; 0 = unbounded), the decode pool
+    (backend / tile size / threads), the simulated origin RTT for
+    benchmarks, and the default ``ReadPolicy`` applied when a read
+    passes none."""
+
+    l1_bytes: int = 256 << 20
+    l2_nodes: int = 0                   # 0 = no L2 tier
+    l2_seed: int = 0
+    l2_mem_bytes: int | None = None
+    l2_flash_bytes: int | None = None
+    max_coldstarts: int = 4             # admission control (§4.2)
+    fetch_concurrency: int = 16         # 0 = unbounded origin reads
+    decode_backend: str = "numpy"
+    decode_threads: int | None = None
+    max_batch_bytes: int = DEFAULT_MAX_BATCH_BYTES
+    origin_delay_s: float = 0.0
+    root: str | None = None             # default root for open()
+    default_policy: ReadPolicy = field(default_factory=ReadPolicy)
+
+
+_SVC_SEQ = itertools.count()        # unique telemetry names per service
+
+
+class ImageService:
+    """Process-wide read-path agent: shared store + cache tiers +
+    limiters + decode pool, handing out per-image ``ImageHandle``
+    sessions. Construct once, ``open()`` per image."""
+
+    def __init__(self, store, config: ServiceConfig | None = None, *,
+                 l1=None, l2=None, fetch_limiter=None, admission=None,
+                 counters=None):
+        cfg = config if config is not None else ServiceConfig()
+        self.config = cfg
+        self.store = store
+        if l1 is not None:
+            self.l1 = l1
+        elif cfg.l1_bytes > 0:
+            from repro.core.cache.local import LocalCache
+            # unique counter name: a process may hold several services
+            # (benchmark configs, tests), and LocalCache keys its
+            # hit/miss telemetry off the name — "l1" for all of them
+            # would merge every service's hit_rate into one aggregate
+            self.l1 = LocalCache(cfg.l1_bytes,
+                                 name=f"svc{next(_SVC_SEQ)}.l1")
+        else:
+            self.l1 = None
+        if l2 is not None:
+            self.l2 = l2
+        elif cfg.l2_nodes > 0:
+            from repro.core.cache.distributed import DistributedCache
+            kw = {}
+            if cfg.l2_mem_bytes is not None:
+                kw["mem_bytes"] = cfg.l2_mem_bytes
+            if cfg.l2_flash_bytes is not None:
+                kw["flash_bytes"] = cfg.l2_flash_bytes
+            self.l2 = DistributedCache(num_nodes=cfg.l2_nodes,
+                                       seed=cfg.l2_seed, **kw)
+        else:
+            self.l2 = None
+        if fetch_limiter is not None:
+            self.fetch_limiter = fetch_limiter
+        else:
+            self.fetch_limiter = BlockingLimiter(cfg.fetch_concurrency) \
+                if cfg.fetch_concurrency > 0 else None
+        if admission is not None:
+            self.admission = admission
+        else:
+            self.admission = RejectingLimiter(cfg.max_coldstarts) \
+                if cfg.max_coldstarts > 0 else None
+        self.counters = counters if counters is not None else COUNTERS
+        # ONE single-flight table across every reader this service hands
+        # out: a chunk-name stampede from different images/tenants costs
+        # one origin fetch process-wide (names are content addresses)
+        self.flights = FlightTable()
+        self._decoders: dict[tuple, BatchDecoder] = {}
+        self._scopes: dict[str, ScopedCounters] = {}
+        self._sessions: dict[tuple, tuple] = {}   # shared reader cache
+        self._manifests: dict[tuple, tuple] = {}  # parsed-manifest cache
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ plumbing
+    def decoder_for(self, policy: ReadPolicy) -> BatchDecoder:
+        """The shared ``BatchDecoder`` matching `policy`'s decode knobs
+        (one pool per distinct backend/tile/eager combination, cached —
+        stampeding reads share pools instead of spawning them)."""
+        cfg = self.config
+        eager = policy.eager_flush if policy.eager_flush is not None \
+            else bool(cfg.default_policy.eager_flush)
+        key = (policy.decode_backend or cfg.decode_backend,
+               policy.max_batch_bytes or cfg.max_batch_bytes,
+               eager)
+        with self._lock:
+            dec = self._decoders.get(key)
+            if dec is None:
+                dec = BatchDecoder(key[0], max_batch_bytes=key[1],
+                                   threads=cfg.decode_threads,
+                                   eager_flush=key[2])
+                self._decoders[key] = dec
+            return dec
+
+    def tenant_counters(self, tenant: str) -> ScopedCounters:
+        """The per-tenant telemetry scope: updates land in both the
+        global counters and ``tenant.<t>::<name>`` (cross-tenant L1
+        dedup shows up as tenant B's scoped ``read.l1_hits`` on chunks
+        tenant A pulled in)."""
+        with self._lock:
+            sc = self._scopes.get(tenant)
+            if sc is None:
+                sc = self.counters.scope(f"tenant.{tenant}")
+                self._scopes[tenant] = sc
+            return sc
+
+    @contextlib.contextmanager
+    def admission_slot(self):
+        """Hold one admission-control slot; raises ``ColdStartRejected``
+        when the service is at ``max_coldstarts`` in-flight (§4.2:
+        reject, don't queue)."""
+        lim = self.admission
+        if lim is None:
+            yield
+            return
+        if not lim.try_acquire():
+            self.counters.inc("serve.coldstart_rejected")
+            raise ColdStartRejected("cold-start rejected: concurrency limit")
+        try:
+            yield
+        finally:
+            lim.release()
+
+    # -------------------------------------------------------------- open
+    def open(self, manifest_blob: bytes, tenant_key: bytes, *,
+             root: str | None = None, tenant: str | None = None,
+             decoder: BatchDecoder | None = None) -> "ImageHandle":
+        """Open an image session. `root` is the root the manifest was
+        FETCHED from (defaults to the config root, then the manifest's
+        creation root); `tenant` defaults to the manifest's tenant and
+        names the telemetry scope. Handles of the same (image, root,
+        tenant) share one ``TieredReader``, so concurrent opens
+        single-flight their fetches against each other."""
+        # parsed-manifest cache: stampeding opens of one image must not
+        # re-decrypt the key table and re-decode the layout every time.
+        # The cache key includes the tenant key, so a caller with the
+        # wrong key still fails authentication in open_manifest instead
+        # of hitting another tenant's parse.
+        mkey = (hashlib.sha256(manifest_blob).digest(), tenant_key)
+        with self._lock:
+            parsed = self._manifests.get(mkey)
+        if parsed is None:
+            manifest = open_manifest(manifest_blob, tenant_key)
+            layout = ImageLayout.from_table(manifest.layout_table,
+                                            manifest.chunk_size)
+            with self._lock:
+                parsed = self._manifests.setdefault(mkey, (manifest, layout))
+        manifest, layout = parsed
+        root = root or self.config.root or manifest.root_id
+        tenant = tenant if tenant is not None else manifest.tenant
+        skey = (manifest.image_id, root, tenant)
+        with self._lock:
+            cached = self._sessions.get(skey)
+        if cached is None or decoder is not None:
+            scope = self.tenant_counters(tenant)
+            reader = TieredReader(
+                manifest, self.store, root=root, l1=self.l1, l2=self.l2,
+                concurrency=self.fetch_limiter,
+                origin_delay_s=self.config.origin_delay_s,
+                decoder=decoder if decoder is not None
+                else self.decoder_for(self.config.default_policy),
+                counters=scope, flights=self.flights)
+            if decoder is not None:
+                # a caller-owned decoder makes the session unshareable;
+                # don't pin it in the cache (a fresh decoder per open()
+                # must not grow the session table without bound)
+                return ImageHandle(self, manifest, layout, reader,
+                                   tenant, scope)
+            with self._lock:
+                cached = self._sessions.setdefault(
+                    skey, (manifest, layout, reader, scope))
+        manifest, layout, reader, scope = cached
+        return ImageHandle(self, manifest, layout, reader, tenant, scope)
+
+    def snapshot(self) -> dict:
+        return self.counters.snapshot()
+
+
+class ImageHandle:
+    """A session over one opened image: demand-loading reads through the
+    service's shared tiers, every method taking one optional
+    ``ReadPolicy`` instead of scattered pipeline keywords."""
+
+    def __init__(self, service: ImageService, manifest, layout: ImageLayout,
+                 reader: TieredReader, tenant: str, scope: ScopedCounters):
+        self.service = service
+        self.manifest = manifest
+        self.layout = layout
+        self.reader = reader
+        self.tenant = tenant
+        self.counters = scope
+
+    # ----------------------------------------------------------- plumbing
+    def _resolve(self, policy: ReadPolicy | None) -> tuple:
+        """(policy, decoder) with the service defaults applied.
+
+        A policy with no decode overrides keeps the handle's bound
+        decoder — which is the caller-supplied one when the session was
+        opened with ``decoder=`` (the ImageReader shim contract), else
+        the service default. An explicit ``eager_flush=True/False`` IS
+        a decode override (it can switch eager off against an eager
+        service default); ``None`` inherits."""
+        p = policy if policy is not None else self.service.config.default_policy
+        if p.decode_backend is None and p.max_batch_bytes is None \
+                and p.eager_flush is None:
+            return p, self.reader.decoder
+        return p, self.service.decoder_for(p)
+
+    def tensor_names(self) -> list:
+        return list(self.layout.tensors)
+
+    # -------------------------------------------------------------- reads
+    def tensor(self, name: str) -> np.ndarray:
+        """Serial restore of one tensor (the reference read path)."""
+        return read_tensor(self.layout, name, self.reader.read)
+
+    def restore_tree(self, names=None,
+                     policy: ReadPolicy | None = None) -> dict:
+        """Flat {path: array} for all (or selected) tensors, via one
+        pipelined batch shaped by `policy` (service default: streamed)."""
+        names = names if names is not None else self.tensor_names()
+        return self.restore_shards({n: None for n in names}, policy)
+
+    def restore_shards(self, shard_slices: dict,
+                       policy: ReadPolicy | None = None) -> dict:
+        """Batched restore of {name: dim_slices | None (full tensor)}.
+
+        Computes every byte range up front, fetches the union chunk set
+        once via ``read_many`` under `policy`, then assembles each
+        tensor/shard. ``mode="serial"`` reads each range through the
+        per-chunk oracle path instead (byte-identical by contract)."""
+        p, dec = self._resolve(policy)
+        plan = []                       # (name, ranges, out_shape, dtype)
+        all_ranges = []
+        for name, sl in shard_slices.items():
+            t = self.layout.tensors[name]
+            dt = np.dtype(t.dtype)
+            if not t.shape or sl is None:
+                ranges = [(t.offset, t.nbytes)]
+                shape = t.shape
+            else:
+                ranges = shard_byte_ranges(t, sl)
+                shape = tuple(e - s for s, e in sl)
+            plan.append((name, ranges, shape, dt))
+            all_ranges.extend(ranges)
+        if p.mode == "serial":
+            bufs = iter([self.reader.read(off, ln)
+                         for off, ln in all_ranges])
+        else:
+            bufs = iter(self.reader.read_many(
+                all_ranges, p.parallelism, streamed=p.streamed,
+                queue_depth=p.queue_depth, decoder=dec))
+        out = {}
+        for name, ranges, shape, dt in plan:
+            raw = b"".join(next(bufs) for _ in ranges)
+            # reshape(()) yields a 0-d array for scalars — identical to
+            # the serial read_tensor path
+            out[name] = np.frombuffer(raw, dt).reshape(shape)
+        return out
+
+    def tensor_shard(self, name: str, dim_slices: list,
+                     policy: ReadPolicy | None = None) -> np.ndarray:
+        """Fetch only the bytes of one rectangular shard (batched)."""
+        return self.restore_shards({name: dim_slices}, policy)[name]
+
+    def shard_chunks(self, shard_slices: dict) -> list:
+        """Chunk indices needed for {tensor_name: [(start, stop) per dim]}."""
+        ranges = []
+        for name, sl in shard_slices.items():
+            t = self.layout.tensors[name]
+            ranges.extend(shard_byte_ranges(t, sl))
+        return ranges_to_chunks(ranges, self.manifest.chunk_size)
+
+    def prefetch(self, chunk_indices: list,
+                 policy: ReadPolicy | None = None):
+        """Concurrently warm the cache tiers for `chunk_indices`.
+
+        Non-materializing: ciphertexts land in L1/L2 but are neither
+        decrypted nor accumulated. A ``streamed`` policy (the default)
+        warms through the streaming fetch producer — per-chunk L2 stripe
+        resolution, bounded hand-off — exactly the path the streamed
+        restore will take."""
+        p, _ = self._resolve(policy)
+        self.reader.fetch_chunks(chunk_indices, p.parallelism,
+                                 materialize=False, streamed=p.streamed,
+                                 queue_depth=p.queue_depth)
+
+
+def single_image_service(store, *, l1=None, l2=None, fetch_limiter=None,
+                         origin_delay_s: float = 0.0) -> ImageService:
+    """A private service with no self-built tiers or limiters — the
+    substrate of the ``ImageReader`` deprecation shim and of one-shot
+    scripts that inject their own tier objects."""
+    cfg = ServiceConfig(l1_bytes=0, l2_nodes=0, fetch_concurrency=0,
+                        max_coldstarts=0, origin_delay_s=origin_delay_s)
+    return ImageService(store, cfg, l1=l1, l2=l2,
+                        fetch_limiter=fetch_limiter)

@@ -42,6 +42,51 @@ class Counters:
         with self._lock:
             self._c.clear()
 
+    def scope(self, tag: str) -> "ScopedCounters":
+        """A tenant/session-scoped view: updates through it land in BOTH
+        the global name and ``<tag>::<name>``, so shared-infrastructure
+        totals stay intact while per-tenant activity stays attributable
+        (the Fig-5 cross-customer dedup story needs both)."""
+        return ScopedCounters(self, tag)
+
+
+class ScopedCounters:
+    """Scoped view over a base ``Counters`` (see ``Counters.scope``).
+
+    Mutators mirror every update into the scoped namespace; readers
+    (``get`` / ``snapshot``) answer from the scoped namespace only.
+    Drop-in for the reader's ``counters`` hook: same inc/add/max_update/
+    get surface, same lock discipline (the base's)."""
+
+    __slots__ = ("_base", "tag")
+    SEP = "::"
+
+    def __init__(self, base: Counters, tag: str):
+        self._base = base
+        self.tag = tag
+
+    def _key(self, name: str) -> str:
+        return f"{self.tag}{self.SEP}{name}"
+
+    def inc(self, name: str, n: float = 1):
+        self._base.inc(name, n)
+        self._base.inc(self._key(name), n)
+
+    add = inc
+
+    def max_update(self, name: str, value: float):
+        self._base.max_update(name, value)
+        self._base.max_update(self._key(name), value)
+
+    def get(self, name: str) -> float:
+        """Scoped value (use the base ``Counters`` for the global one)."""
+        return self._base.get(self._key(name))
+
+    def snapshot(self) -> dict:
+        pre = f"{self.tag}{self.SEP}"
+        return {k[len(pre):]: v for k, v in self._base.snapshot().items()
+                if k.startswith(pre)}
+
 
 COUNTERS = Counters()
 

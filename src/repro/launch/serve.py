@@ -1,6 +1,11 @@
 """Production-style serving launcher: cold-start a replica from a chunk
 store manifest and serve a batch of synthetic requests.
 
+The flags build ONE ``ServiceConfig``; everything the read path shares —
+L1/L2 tiers, admission control, origin-fetch concurrency, the decode
+pool — is owned by a single process-wide ``ImageService``, and the
+per-restore pipeline shape is one ``ReadPolicy``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       [--store DIR --image IMAGE_ID] [--requests 8]
@@ -23,6 +28,10 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--l1-bytes", type=int, default=256 << 20,
+                    help="shared worker-local L1 cache size (0 = no L1)")
+    ap.add_argument("--l2-nodes", type=int, default=6,
+                    help="erasure-coded L2 cluster size (0 = no L2)")
     ap.add_argument("--max-coldstarts", type=int, default=4,
                     help="admission control: concurrent cold starts this "
                          "replica accepts before REJECTING (RejectingLimiter, "
@@ -36,21 +45,23 @@ def main():
                     choices=["numpy", "jax", "serial"],
                     help="post-fetch batch decode backend")
     ap.add_argument("--read-path", default="streamed",
-                    choices=["streamed", "staged"],
-                    help="streamed = decode tiles overlap the fetch via a "
-                         "bounded hand-off queue; staged = two-phase "
-                         "fetch-then-decode (the byte-identity oracle)")
+                    choices=["streamed", "staged", "serial"],
+                    help="ReadPolicy.mode: streamed = decode tiles overlap "
+                         "the fetch via a bounded hand-off queue; staged = "
+                         "two-phase fetch-then-decode; serial = the "
+                         "per-chunk byte-identity oracle")
+    ap.add_argument("--eager-flush", action="store_true",
+                    help="idle-queue opportunistic flush: decode the "
+                         "partial tile whenever the streamed consumer "
+                         "would otherwise block")
     args = ap.parse_args()
 
     import jax
 
     from repro.configs import get_config
-    from repro.core.cache.distributed import DistributedCache
-    from repro.core.cache.local import LocalCache
-    from repro.core.concurrency import BlockingLimiter, RejectingLimiter
-    from repro.core.decode import BatchDecoder
     from repro.core.gc import GenerationalGC
     from repro.core.loader import create_image
+    from repro.core.service import ImageService, ReadPolicy, ServiceConfig
     from repro.core.store import ChunkStore
     from repro.models import build_model
     from repro.serve.coldstart import cold_start
@@ -76,32 +87,35 @@ def main():
         print(f"imaged {stats.total_chunks} chunks "
               f"({stats.bytes_total/1e6:.1f} MB)")
 
-    l1 = LocalCache(256 << 20)
-    l2 = DistributedCache(num_nodes=6, seed=0)
-    # both serving-replica bounds come from config: admission control
-    # (reject excess cold starts) and fetch concurrency (block excess
-    # origin reads) are separate knobs (§4.2)
-    limiter = RejectingLimiter(args.max_coldstarts)
-    fetch_limiter = BlockingLimiter(args.fetch_concurrency) \
-        if args.fetch_concurrency > 0 else None
+    # ONE config object owns every shared read-path knob: cache tiers,
+    # admission control (reject excess cold starts) and fetch concurrency
+    # (block excess origin reads) are separate bounds (§4.2)
+    policy = ReadPolicy(mode=args.read_path, parallelism=args.parallelism,
+                        eager_flush=args.eager_flush)
+    service = ImageService(store, ServiceConfig(
+        l1_bytes=args.l1_bytes,
+        l2_nodes=args.l2_nodes,
+        max_coldstarts=args.max_coldstarts,
+        fetch_concurrency=args.fetch_concurrency,
+        decode_backend=args.decode_backend,
+        root=root,
+        default_policy=policy,
+    ))
     t0 = time.time()
-    engine, stats = cold_start(model, blob, key, store, l1=l1, l2=l2,
-                               root=root, limiter=limiter,
-                               fetch_limiter=fetch_limiter,
-                               parallelism=args.parallelism,
-                               streamed=args.read_path == "streamed",
-                               decoder=BatchDecoder(args.decode_backend),
+    engine, stats = cold_start(model, blob, key, service, policy=policy,
                                max_batch=4, max_len=64)
-    overlap = ""
+    pipe = ""
+    if stats.get("fetch_wall_s") is not None:   # serial mode has no split
+        pipe = (f", fetch {stats['fetch_wall_s']:.2f}s + "
+                f"decode[{stats['decode_backend']}] "
+                f"{stats['decode_wall_s']:.2f}s")
     if stats.get("streamed"):
-        overlap = (f", {stats['overlap_s']:.2f}s decode hidden under fetch "
-                   f"(queue hwm {stats['queue_hwm']})")
+        pipe += (f", {stats['overlap_s']:.2f}s decode hidden under fetch "
+                 f"(queue hwm {stats['queue_hwm']}"
+                 f"{', eager flushes %d' % stats['eager_flushes'] if args.eager_flush else ''})")
     print(f"cold start {time.time()-t0:.2f}s [{args.read_path}] "
-          f"(load {stats['load_seconds']:.2f}s, "
-          f"origin fetches {stats['origin_fetches']:.0f}, "
-          f"fetch {stats['fetch_wall_s']:.2f}s + "
-          f"decode[{stats['decode_backend']}] {stats['decode_wall_s']:.2f}s"
-          f"{overlap})")
+          f"(load {stats['load_seconds']:.2f}s, tenant {stats['tenant']}, "
+          f"origin fetches {stats['origin_fetches']:.0f}{pipe})")
 
     reqs = [Request(i, prompt=[1 + i, 2, 3], max_new=args.max_new)
             for i in range(args.requests)]

@@ -1,10 +1,21 @@
 """Replica cold-start via on-demand chunk loading — the paper's core
 customer-visible metric, applied to model serving.
 
-``cold_start`` restores a model's (bf16-cast) weights from the chunk store
-through the cache hierarchy and stands up a ServeEngine. For MoE configs,
-``expert_shard`` restores only this worker's experts (EP sparsity: the
-demand-loading analogue of 'applications touch 6.4% of the image').
+``cold_start`` admits the start through the shared ``ImageService``
+(admission control lives in the service, §4.2: excess starts are
+REJECTED with ``ColdStartRejected``, not queued), opens the image as a
+tenant session, restores the weights through the shared cache tiers
+under one ``ReadPolicy``, promotes any float64 leaves to float32 (the
+serving dtype; see the test asserting this), and stands up a
+``ServeEngine``. For MoE configs, ``expert_shard_restore`` restores only
+this worker's experts (EP sparsity: the demand-loading analogue of
+'applications touch 6.4% of the image').
+
+The pre-redesign calling convention — a raw store plus the
+l1/l2/limiter/fetch_limiter/batched/streamed/parallelism knob tuple —
+still works as a deprecation path: it builds a private single-image
+service per call. New code passes an ``ImageService`` and a
+``ReadPolicy``.
 """
 from __future__ import annotations
 
@@ -14,49 +25,82 @@ import jax
 import numpy as np
 
 from repro.core.blockdev import DEFAULT_PARALLELISM
-from repro.core.loader import ImageReader
-from repro.core.telemetry import COUNTERS
+from repro.core.service import ImageService, ReadPolicy, single_image_service
 from repro.serve.engine import ServeEngine
 from repro.train.checkpoint import tree_from_flat
 
 
-def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
-               l1=None, l2=None, root=None, max_batch=4, max_len=128,
-               limiter=None, fetch_limiter=None, parallelism=DEFAULT_PARALLELISM,
-               batched=True, streamed=True, decoder=None) -> tuple:
+def cold_start(model, manifest_blob: bytes, tenant_key: bytes, service, *,
+               root=None, tenant=None, policy: ReadPolicy | None = None,
+               max_batch=4, max_len=128,
+               # ---- deprecated store-calling-convention knobs (None
+               # sentinels so misuse alongside a service is detectable) ----
+               l1=None, l2=None, limiter=None, fetch_limiter=None,
+               parallelism=None, batched=None, streamed=None,
+               decoder=None) -> tuple:
     """Returns (engine, stats).
 
-    The restore goes through the streaming fetch→decode read path
-    (`parallelism`-wide origin pipeline, optionally bounded by
-    `fetch_limiter`, a BlockingLimiter; decrypt+verify tiles overlap the
-    fetch via a bounded hand-off queue, backend selected by `decoder`).
-    `streamed=False` selects the staged two-phase pipeline (decode after
-    fetch) and `batched=False` the serial chunk loop, both kept as
-    byte-identity oracles. `limiter` is the admission-control
-    RejectingLimiter."""
-    if limiter is not None and not limiter.try_acquire():
-        COUNTERS.inc("serve.coldstart_rejected")
-        raise RuntimeError("cold-start rejected: concurrency limit")
-    try:
+    `service` is the process-wide ``ImageService`` (shared L1/L2,
+    admission + fetch limiters, decode pool); the restore runs through
+    ``service.open(...)`` under `policy` (service default: streamed
+    fetch→decode overlap). Admission control is the service's: when it
+    is at ``max_coldstarts`` in-flight starts, ``ColdStartRejected``
+    (a RuntimeError) is raised and ``serve.coldstart_rejected`` ticks.
+
+    Restored weights are promoted float64 -> float32 (the serving
+    dtype): images created from numpy-default-precision trees would
+    otherwise double serve memory and halve matmul throughput. Other
+    dtypes (float32/bf16-as-uint16/int8) pass through untouched.
+
+    Deprecation path: passing a raw chunk store as `service` (with the
+    old l1/l2/limiter/fetch_limiter/batched/streamed/parallelism/decoder
+    keywords) builds a private single-image service per call — kept for
+    the byte-identity oracles; `limiter` becomes the private service's
+    admission limiter."""
+    if not isinstance(service, ImageService):
+        service = single_image_service(service, l1=l1, l2=l2,
+                                       fetch_limiter=fetch_limiter)
+        service.admission = limiter
+        if policy is None:
+            policy = ReadPolicy.from_legacy(
+                batched=batched if batched is not None else True,
+                streamed=streamed if streamed is not None else True,
+                parallelism=parallelism if parallelism is not None
+                else DEFAULT_PARALLELISM)
+    elif any(k is not None for k in (l1, l2, limiter, fetch_limiter, decoder,
+                                     parallelism, batched, streamed)):
+        raise TypeError("cold_start(service=ImageService, ...) owns its "
+                        "tiers and limiters and reads under a ReadPolicy; "
+                        "the legacy l1/l2/limiter/fetch_limiter/decoder/"
+                        "parallelism/batched/streamed keywords only apply "
+                        "to the deprecated raw-store calling convention")
+    with service.admission_slot():
         t0 = time.time()
-        before_origin = COUNTERS.get("read.origin_fetches")
-        reader = ImageReader(manifest_blob, tenant_key, store, l1=l1, l2=l2,
-                             root=root, concurrency=fetch_limiter,
-                             decoder=decoder)
+        handle = service.open(manifest_blob, tenant_key, root=root,
+                              tenant=tenant, decoder=decoder)
+        # origin traffic is attributed through the tenant's telemetry
+        # scope, not the global counter — concurrent cold-starts of
+        # OTHER tenants through the same service must not leak into
+        # this replica's stats
+        before_origin = handle.counters.get("read.origin_fetches")
         template = model.param_shapes()
-        flat = reader.restore_tree(batched=batched, parallelism=parallelism,
-                                   streamed=streamed)
+        flat = handle.restore_tree(policy=policy)
         params = tree_from_flat(template, flat)
         params = jax.tree.map(
             lambda p: p.astype(np.float32) if p.dtype == np.float64 else p, params)
         t_load = time.time() - t0
         engine = ServeEngine(model, params, max_batch=max_batch, max_len=max_len)
-        lb = reader.reader.last_batch
+        # last_batch is the shared reader's most recent batch: exact for
+        # this restore unless the SAME image is being restored by a
+        # concurrent replica (whose batch may have landed later)
+        lb = handle.reader.last_batch
         stats = {
             "load_seconds": t_load,
-            "origin_fetches": COUNTERS.get("read.origin_fetches") - before_origin,
-            "image_bytes": reader.layout.image_size,
-            "l2_sim_latency_p50": reader.reader.read_lat.percentile(50),
+            "tenant": handle.tenant,
+            "origin_fetches": handle.counters.get("read.origin_fetches")
+            - before_origin,
+            "image_bytes": handle.layout.image_size,
+            "l2_sim_latency_p50": handle.reader.read_lat.percentile(50),
             "sim_pipelined_s": lb.get("sim_pipelined_s"),
             "sim_serial_s": lb.get("sim_serial_s"),
             # pipeline split: I/O wall vs decode work; in streamed mode
@@ -68,21 +112,25 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, store, *,
             "overlap_s": lb.get("overlap_s"),
             "overlap_fraction": lb.get("overlap_fraction"),
             "queue_hwm": lb.get("queue_hwm"),
+            "eager_flushes": lb.get("eager_flushes"),
         }
         return engine, stats
-    finally:
-        if limiter is not None:
-            limiter.release()
 
 
-def expert_shard_restore(reader: ImageReader, num_experts: int,
+def expert_shard_restore(reader, num_experts: int,
                          ep_rank: int, ep_size: int,
-                         parallelism: int = DEFAULT_PARALLELISM) -> dict:
+                         parallelism: int = DEFAULT_PARALLELISM,
+                         policy: ReadPolicy | None = None) -> dict:
     """Restore only this worker's expert slices (plus all non-expert
     tensors): the EP sparsity path. Returns {name: array-or-shard}.
 
-    All tensors' byte ranges go into a single batched `restore_shards`
-    call, so the whole shard restore is one pipelined fetch."""
+    `reader` is an ``ImageHandle`` (or the deprecated ``ImageReader``
+    shim). All tensors' byte ranges go into a single batched
+    ``restore_shards`` call under `policy` (default: a streamed policy
+    at `parallelism` — before the redesign this path silently ignored
+    the pipeline knobs and always used staged defaults)."""
+    if policy is None:
+        policy = ReadPolicy(parallelism=parallelism)
     lo = num_experts * ep_rank // ep_size
     hi = num_experts * (ep_rank + 1) // ep_size
     shard_slices = {}
@@ -96,4 +144,4 @@ def expert_shard_restore(reader: ImageReader, num_experts: int,
             sl = [(0, d) for d in t.shape]
             sl[edim] = (lo, hi)
             shard_slices[name] = sl
-    return reader.restore_shards(shard_slices, parallelism=parallelism)
+    return reader.restore_shards(shard_slices, policy=policy)

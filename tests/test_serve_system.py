@@ -138,6 +138,8 @@ class TestEndToEnd:
         assert req.done and len(req.out) == 4
 
     def test_coldstart_api(self, tmp_path):
+        from repro.core.service import ImageService, ReadPolicy, ServiceConfig
+
         cfg = get_config("smollm-360m").reduced()
         model = build_model(cfg)
         params = model.init(jax.random.key(0))
@@ -147,10 +149,16 @@ class TestEndToEnd:
         blob, _ = create_image(state_to_tree(params), tenant="t",
                                tenant_key=b"W" * 32, store=store,
                                root=gc.active, chunk_size=16384)
-        lim = RejectingLimiter(1)
-        eng, stats = cold_start(model, blob, b"W" * 32, store,
-                                limiter=lim, max_batch=2, max_len=32)
+        # the redesigned convention: one process-wide service owns the
+        # tiers and admission control; the read shape is one ReadPolicy
+        service = ImageService(store, ServiceConfig(
+            l1_bytes=64 << 20, l2_nodes=0, max_coldstarts=1))
+        eng, stats = cold_start(model, blob, b"W" * 32, service,
+                                policy=ReadPolicy(parallelism=4),
+                                max_batch=2, max_len=32)
         assert stats["load_seconds"] > 0
+        assert stats["tenant"] == "t"
+        assert service.admission.inflight == 0
         req = Request(0, prompt=[4, 5], max_new=3)
         eng.submit(req)
         eng.run_until_drained()

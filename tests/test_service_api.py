@@ -1,0 +1,502 @@
+"""The ImageService / ImageHandle / ReadPolicy client API: multi-tenant
+concurrency over one shared service (byte identity, cross-tenant dedup
+in scoped telemetry, process-wide single-flight), admission control
+under real concurrency, the idle-queue eager flush, policy plumbing
+through prefetch / expert_shard_restore, the float32 serving-dtype cast,
+and the ImageReader deprecation shim's equivalence."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.cache.local import LocalCache
+from repro.core.gc import GenerationalGC
+from repro.core.loader import ImageReader, create_image
+from repro.core.manifest import ZERO_CHUNK
+from repro.core.service import (
+    ColdStartRejected,
+    ImageService,
+    ReadPolicy,
+    ServiceConfig,
+)
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS, Counters
+from repro.serve.coldstart import cold_start, expert_shard_restore
+
+CS = 4096
+
+
+# ------------------------------------------------------------ fixtures
+
+def make_tenant_images(store, root, *, rows=16, seed=3):
+    """3 images / 2 tenants sharing one base tensor (convergent chunk
+    names make the base dedup across tenants)."""
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((rows, 1024)).astype(np.float32)
+    specs = [
+        ("tenantA", b"A" * 32),
+        ("tenantA", b"A" * 32),
+        ("tenantB", b"B" * 32),
+    ]
+    images = []
+    for i, (tenant, key) in enumerate(specs):
+        tree = {"base": base,
+                "delta": rng.standard_normal((2, 1024)).astype(np.float32)}
+        blob, stats = create_image(tree, tenant=tenant, tenant_key=key,
+                                   store=store, root=root, chunk_size=CS,
+                                   image_id=f"img{i}")
+        images.append((tenant, key, tree, blob, stats))
+    return images
+
+
+class _TinyModel:
+    """Minimal model for cold_start: enough surface for ServeEngine
+    construction (decode_step is never stepped in these tests)."""
+
+    class cfg:
+        vocab_size = 8
+
+    def __init__(self, template):
+        self._template = template
+
+    def param_shapes(self):
+        return self._template
+
+    def init_decode_state(self, max_batch, max_len):
+        return {"pos": np.zeros((max_batch,), np.int32)}
+
+    def decode_step(self, params, state, tokens, pos):  # pragma: no cover
+        raise NotImplementedError
+
+
+class GatedStore(ChunkStore):
+    """Chunk GETs block on `gate` — holds accepted cold-starts in-flight
+    so admission rejections become deterministic."""
+
+    def __init__(self, root_dir):
+        super().__init__(root_dir)
+        self.gate = threading.Event()
+
+    def get_chunk(self, root, name):
+        self.gate.wait(timeout=30)
+        return super().get_chunk(root, name)
+
+
+# ------------------------------------------- multi-tenant shared service
+
+def test_multitenant_concurrent_coldstarts_shared_service(tmp_path):
+    """The acceptance scenario: >=3 distinct images from >=2 tenants
+    cold-started concurrently over ONE shared service, byte-identical to
+    the per-image serial oracles, cross-tenant L1 dedup visible in
+    scoped telemetry, origin traffic bounded by the unique chunk union."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    oracles = [ImageReader(blob, key, store).restore_tree(batched=False)
+               for _, key, _, blob, _ in images]
+
+    service = ImageService(store, ServiceConfig(
+        l1_bytes=64 << 20, l2_nodes=0, fetch_concurrency=16,
+        max_coldstarts=16))
+    before = COUNTERS.snapshot()
+    results: dict = {}
+    errs: list = []
+    jobs = [i for i in range(len(images)) for _ in range(2)]   # M = 6
+    barrier = threading.Barrier(len(jobs))
+
+    def work(slot, i):
+        try:
+            tenant, key, _, blob, _ = images[i]
+            barrier.wait()
+            h = service.open(blob, key)
+            results[slot] = (i, h.restore_tree())
+        except Exception as e:      # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(s, i))
+               for s, i in enumerate(jobs)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs and len(results) == len(jobs)
+    for _slot, (i, flat) in results.items():
+        for n in oracles[i]:
+            assert np.array_equal(flat[n], oracles[i][n]), (i, n)
+
+    after = COUNTERS.snapshot()
+
+    def delta(name):
+        return after.get(name, 0.0) - before.get(name, 0.0)
+
+    origin = delta("read.origin_fetches")
+    # shared L1 + the service-wide FlightTable bound origin traffic by
+    # the unique chunk-name union across images AND tenants
+    unique_union = sum(s.unique_chunks for *_x, s in images)
+    assert origin == unique_union, (origin, unique_union)
+    # cross-tenant dedup observable: both tenants did reads, but the
+    # union was fetched once — and every origin fetch is attributed to
+    # exactly one tenant scope
+    assert delta("tenant.tenantA::read.batched_chunks") > 0
+    assert delta("tenant.tenantB::read.batched_chunks") > 0
+    assert delta("tenant.tenantA::read.origin_fetches") + \
+        delta("tenant.tenantB::read.origin_fetches") == origin
+
+
+def test_cross_tenant_l1_hits_in_scoped_telemetry(tmp_path):
+    """Tenant A warms the shared L1; tenant B's FIRST read then scores
+    scoped L1 hits on the shared base chunks it never fetched — the
+    Fig 5 cross-customer dedup, observable per tenant."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    service = ImageService(store, ServiceConfig(
+        l1_bytes=64 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0))
+    tenant, key, tree, blob, _ = images[0]          # tenantA
+    service.open(blob, key).restore_tree()
+    mark = COUNTERS.snapshot()
+    tenant_b, key_b, tree_b, blob_b, stats_b = images[2]
+    flat = service.open(blob_b, key_b).restore_tree()
+    for n in tree_b:
+        assert np.array_equal(flat[n], np.asarray(tree_b[n]))
+    after = COUNTERS.snapshot()
+
+    def delta(name):
+        return after.get(name, 0.0) - mark.get(name, 0.0)
+
+    base_chunks = stats_b.dedup_chunks        # chunks shared with tenantA
+    assert base_chunks > 0
+    assert delta("tenant.tenantB::read.l1_hits") >= base_chunks
+    # tenantB only went to origin for its own unique delta chunks
+    assert delta("tenant.tenantB::read.origin_fetches") == stats_b.unique_chunks
+    # tenantA idle during B's read
+    assert delta("tenant.tenantA::read.l1_hits") == 0
+
+
+def test_same_image_handles_share_reader_and_singleflight(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    _, key, tree, blob, stats = images[0]
+    service = ImageService(store, ServiceConfig(l1_bytes=64 << 20,
+                                                l2_nodes=0))
+    h1 = service.open(blob, key)
+    h2 = service.open(blob, key)
+    assert h1.reader is h2.reader       # one session substrate per image
+    before = COUNTERS.get("read.origin_fetches")
+    flat1 = h1.restore_tree()
+    flat2 = h2.restore_tree(policy=ReadPolicy(mode="staged"))
+    fetched = COUNTERS.get("read.origin_fetches") - before
+    assert fetched == stats.unique_chunks
+    for n in tree:
+        assert np.array_equal(flat1[n], flat2[n])
+
+
+# ------------------------------------------------------ admission control
+
+def test_admission_rejects_exactly_the_excess_under_concurrency(tmp_path):
+    """M > max_coldstarts simultaneous cold_starts through one shared
+    service: exactly M - max_coldstarts rejections
+    (serve.coldstart_rejected), accepted restores byte-identical."""
+    store = GatedStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.standard_normal((2048,)).astype(np.float32)}
+    store.gate.set()                    # creation writes need no gate
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"T" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+    oracle = ImageReader(blob, b"T" * 32, store).restore_tree(batched=False)
+    store.gate.clear()                  # now hold every origin GET
+
+    maxc, m = 2, 6
+    service = ImageService(store, ServiceConfig(
+        l1_bytes=0, l2_nodes=0, fetch_concurrency=0, max_coldstarts=maxc))
+    model = _TinyModel(jax.eval_shape(
+        lambda: {"w": np.zeros((2048,), np.float32)}))
+    before_rej = COUNTERS.get("serve.coldstart_rejected")
+    engines, rejected, errs = [], [], []
+    barrier = threading.Barrier(m)
+
+    def work():
+        try:
+            barrier.wait()
+            eng, stats = cold_start(model, blob, b"T" * 32, service,
+                                    max_batch=1, max_len=8)
+            engines.append(eng)
+        except ColdStartRejected:
+            rejected.append(1)
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work) for _ in range(m)]
+    for t in threads:
+        t.start()
+    # the accepted starts are parked on the gated store; wait until the
+    # in-flight + rejected picture is complete, then release the fetches
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if service.admission.inflight == maxc and len(rejected) == m - maxc:
+            break
+        time.sleep(0.005)
+    store.gate.set()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(engines) == maxc
+    assert len(rejected) == m - maxc
+    assert COUNTERS.get("serve.coldstart_rejected") - before_rej == m - maxc
+    assert service.admission.inflight == 0      # slots released
+    for eng in engines:
+        assert np.array_equal(np.asarray(eng.params["w"]), oracle["w"])
+
+
+def test_legacy_coldstart_store_convention_still_works(tmp_path):
+    """The deprecated raw-store calling convention (l1/l2/limiter/...)
+    keeps working through a private single-image service."""
+    from repro.core.concurrency import RejectingLimiter
+
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(1)
+    tree = {"w": rng.standard_normal((1024,)).astype(np.float32)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"L" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+    model = _TinyModel(jax.eval_shape(
+        lambda: {"w": np.zeros((1024,), np.float32)}))
+    lim = RejectingLimiter(1)
+    eng, stats = cold_start(model, blob, b"L" * 32, store, limiter=lim,
+                            l1=LocalCache(8 << 20, name="lg"),
+                            max_batch=1, max_len=8)
+    assert np.array_equal(np.asarray(eng.params["w"]), np.asarray(tree["w"]))
+    assert stats["load_seconds"] > 0
+    # mixing the legacy knobs with a real service is a TypeError
+    service = ImageService(store, ServiceConfig(l2_nodes=0))
+    with pytest.raises(TypeError):
+        cold_start(model, blob, b"L" * 32, service, limiter=lim)
+
+
+# ------------------------------------------------- serving dtype contract
+
+def test_coldstart_promotes_float64_to_float32(tmp_path):
+    """cold_start's documented serving-dtype contract: float64 leaves
+    (numpy default precision) are promoted to float32; float32 and
+    integer leaves pass through untouched."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(2)
+    tree = {"w64": rng.standard_normal((512,)),               # float64
+            "w32": rng.standard_normal((512,)).astype(np.float32),
+            "i8": rng.integers(-8, 8, (64,)).astype(np.int8)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"D" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+    template = jax.eval_shape(lambda: {
+        "w64": np.zeros((512,), np.float64),
+        "w32": np.zeros((512,), np.float32),
+        "i8": np.zeros((64,), np.int8)})
+    model = _TinyModel(template)
+    service = ImageService(store, ServiceConfig(l2_nodes=0))
+    eng, _ = cold_start(model, blob, b"D" * 32, service,
+                        max_batch=1, max_len=8)
+    assert eng.params["w64"].dtype == np.float32
+    assert eng.params["w32"].dtype == np.float32
+    assert eng.params["i8"].dtype == np.int8
+    assert np.allclose(np.asarray(eng.params["w64"]),
+                       tree["w64"].astype(np.float32))
+
+
+# ------------------------------------------------------------ ReadPolicy
+
+def test_readpolicy_validation_and_legacy_mapping():
+    with pytest.raises(ValueError):
+        ReadPolicy(mode="bogus")
+    with pytest.raises(ValueError):
+        ReadPolicy(decode_backend="bogus")
+    with pytest.raises(ValueError):
+        ReadPolicy(parallelism=0)
+    assert ReadPolicy.from_legacy(batched=False).mode == "serial"
+    assert ReadPolicy.from_legacy(streamed=False).mode == "staged"
+    p = ReadPolicy.from_legacy(parallelism=3)
+    assert p.mode == "streamed" and p.parallelism == 3
+
+
+def test_policy_modes_byte_identical_through_service(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    _, key, tree, blob, _ = images[0]
+    flats = []
+    for pol in (ReadPolicy(mode="serial"), ReadPolicy(mode="staged"),
+                ReadPolicy(mode="streamed"),
+                ReadPolicy(mode="streamed", eager_flush=True),
+                ReadPolicy(mode="streamed", max_batch_bytes=CS),
+                ReadPolicy(mode="staged", decode_backend="serial")):
+        svc = ImageService(store, ServiceConfig(l1_bytes=8 << 20,
+                                                l2_nodes=0))
+        flats.append(svc.open(blob, key).restore_tree(policy=pol))
+    for flat in flats[1:]:
+        for n in tree:
+            assert np.array_equal(flats[0][n], flat[n]), n
+
+
+def test_eager_flush_fires_and_stays_identical(tmp_path):
+    """With a slow origin and one giant tile budget, the plain streamed
+    path decodes everything in ONE post-fetch tile; eager_flush decodes
+    partial tiles during fetch stalls instead — more tiles, same bytes,
+    visible in telemetry."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(4)
+    tree = {"w": rng.standard_normal((CS * 12 // 4,)).astype(np.float32)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"E" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+
+    def run(eager):
+        svc = ImageService(store, ServiceConfig(
+            l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+            origin_delay_s=0.01, max_batch_bytes=64 << 20))
+        h = svc.open(blob, b"E" * 32)
+        flat = h.restore_tree(policy=ReadPolicy(
+            mode="streamed", parallelism=2, eager_flush=eager))
+        return flat, h.reader.last_batch
+
+    flat_plain, lb_plain = run(False)
+    before = COUNTERS.get("decode.eager_flushes")
+    flat_eager, lb_eager = run(True)
+    assert np.array_equal(flat_plain["w"], flat_eager["w"])
+    assert np.array_equal(flat_plain["w"], np.asarray(tree["w"]))
+    assert lb_plain["eager_flushes"] == 0
+    assert lb_eager["eager_flushes"] >= 1
+    assert lb_eager["decode_tiles"] > lb_plain["decode_tiles"]
+    assert COUNTERS.get("decode.eager_flushes") - before == \
+        lb_eager["eager_flushes"]
+    # tri-state: an explicit eager_flush=False overrides an eager
+    # service DEFAULT (None would inherit it)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+        origin_delay_s=0.01, max_batch_bytes=64 << 20,
+        default_policy=ReadPolicy(eager_flush=True)))
+    h = svc.open(blob, b"E" * 32)
+    assert h._resolve(None)[1].eager_flush is True           # inherits
+    assert h._resolve(ReadPolicy(eager_flush=False))[1].eager_flush is False
+    h.restore_tree(policy=ReadPolicy(
+        mode="streamed", parallelism=2, eager_flush=False))
+    assert h.reader.last_batch["eager_flushes"] == 0
+
+
+# ----------------------------------------------------- policy plumbing
+
+def test_prefetch_streamed_policy_warms_tiers(tmp_path):
+    from test_batched_read import CountingStore
+    store = CountingStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    _, key, tree, blob, stats = images[0]
+    svc = ImageService(store, ServiceConfig(l1_bytes=32 << 20, l2_nodes=0))
+    h = svc.open(blob, key)
+    store.gets = 0
+    h.prefetch(list(range(h.layout.num_chunks)),
+               policy=ReadPolicy(mode="streamed", parallelism=4))
+    lb = h.reader.last_batch
+    assert lb["streamed"] is True and lb["materialized"] is False
+    uniq = len({c.name for c in h.manifest.chunks if c.name != ZERO_CHUNK})
+    assert store.gets == uniq
+    store.gets = 0
+    flat = h.restore_tree()             # all L1 now: no origin traffic
+    assert store.gets == 0
+    for n in tree:
+        assert np.array_equal(flat[n], np.asarray(tree[n]))
+
+
+def test_expert_shard_restore_policy_plumbs(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(5)
+    ne = 4
+    tree = {"moe/experts": rng.standard_normal((2, ne, 64)).astype(np.float32),
+            "dense/w": rng.standard_normal((32, 8)).astype(np.float32)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"X" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+    svc = ImageService(store, ServiceConfig(l1_bytes=8 << 20, l2_nodes=0))
+    h = svc.open(blob, b"X" * 32)
+    for pol in (None, ReadPolicy(mode="staged"), ReadPolicy(mode="serial")):
+        shard = expert_shard_restore(h, ne, ep_rank=1, ep_size=2, policy=pol)
+        assert np.array_equal(shard["moe/experts"],
+                              np.asarray(tree["moe/experts"])[:, 2:4])
+        assert np.array_equal(shard["dense/w"], np.asarray(tree["dense/w"]))
+    # the deprecated ImageReader shim takes the same policy keyword
+    shard = expert_shard_restore(ImageReader(blob, b"X" * 32, store), ne,
+                                 ep_rank=0, ep_size=2,
+                                 policy=ReadPolicy(mode="staged"))
+    assert np.array_equal(shard["moe/experts"],
+                          np.asarray(tree["moe/experts"])[:, 0:2])
+
+
+# ------------------------------------------------------ scoped telemetry
+
+def test_scoped_counters_unit():
+    c = Counters()
+    s = c.scope("tenant.t1")
+    s.inc("x")
+    s.add("x", 2)
+    s.max_update("hwm", 5)
+    s.max_update("hwm", 3)
+    assert c.get("x") == 3 and s.get("x") == 3
+    assert c.get("tenant.t1::x") == 3
+    assert s.get("hwm") == 5
+    assert s.snapshot() == {"x": 3, "hwm": 5}
+    # a second scope is independent in its namespace, shared globally
+    s2 = c.scope("tenant.t2")
+    s2.inc("x")
+    assert c.get("x") == 4 and s.get("x") == 3 and s2.get("x") == 1
+
+
+def test_bound_decoder_honored_by_policy_reads(tmp_path):
+    """A caller-supplied decoder (shim ``decoder=`` / ``open(decoder=)``)
+    must drive policy-based reads when the policy carries no decode
+    overrides — and policy decode overrides must still win."""
+    from repro.core.decode import BatchDecoder
+
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    _, key, tree, blob, _ = images[0]
+    shim = ImageReader(blob, key, store, decoder=BatchDecoder("serial"))
+    flat = shim.restore_tree(streamed=False)
+    assert shim.reader.last_batch["decode_backend"] == "serial"
+    for n in tree:
+        assert np.array_equal(flat[n], np.asarray(tree[n]))
+    svc = ImageService(store, ServiceConfig(l1_bytes=0, l2_nodes=0,
+                                            fetch_concurrency=0))
+    h = svc.open(blob, key, decoder=BatchDecoder("serial"))
+    h.restore_tree(policy=ReadPolicy(mode="staged"))
+    assert h.reader.last_batch["decode_backend"] == "serial"
+    h.restore_tree(policy=ReadPolicy(mode="staged", decode_backend="numpy"))
+    assert h.reader.last_batch["decode_backend"] == "numpy"
+
+
+def test_imagereader_shim_equals_service(tmp_path):
+    """The deprecation shim and a direct service session produce
+    identical bytes and expose the same reader surface."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = make_tenant_images(store, gc.active)
+    _, key, tree, blob, _ = images[0]
+    shim = ImageReader(blob, key, store)
+    svc = ImageService(store, ServiceConfig(l1_bytes=0, l2_nodes=0,
+                                            fetch_concurrency=0))
+    h = svc.open(blob, key)
+    a = shim.restore_tree()
+    b = h.restore_tree()
+    for n in tree:
+        assert np.array_equal(a[n], b[n])
+    assert shim.layout.image_size == h.layout.image_size
+    assert shim.tensor_names() == h.tensor_names()
+    assert np.array_equal(shim.tensor("base"), h.tensor("base"))
+    sl = {"base": [(0, 8), (0, 1024)]}
+    assert shim.shard_chunks(sl) == h.shard_chunks(sl)
+    assert np.array_equal(shim.tensor_shard("base", sl["base"]),
+                          h.tensor_shard("base", sl["base"]))
