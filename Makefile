@@ -11,3 +11,6 @@ bench:           ## all paper-figure benchmarks (CSV to stdout; also writes BENC
 
 bench-read:      ## Fig 11 + restore trajectory + multi-tenant scenario -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py e2e_read_latency
+
+bench-decode:    ## per-decode-backend keystream/verify GB/s -> BENCH_e2e.json
+	PYTHONPATH=src:. python benchmarks/run.py decode_kernels

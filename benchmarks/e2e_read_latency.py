@@ -36,7 +36,6 @@ identity, a shared-service multi-tenant identity check, and hard
 regression gates (non-zero exit on failure), in a few seconds."""
 from __future__ import annotations
 
-import json
 import os
 import tempfile
 import threading
@@ -119,6 +118,8 @@ def restore_pipeline_configs(store, blob, key) -> dict:
         "streamed_restore_s": t_str,
         "streamed_eager_restore_s": t_egr,
         "eager_flushes": lb_egr["eager_flushes"],
+        "eager_holds": lb_egr.get("eager_holds", 0),
+        "eager_min_bytes": ServiceConfig().eager_min_bytes,
         "eager_decode_tiles": lb_egr["decode_tiles"],
         "eager_overlap_s": lb_egr["overlap_s"],
         "eager_speedup_vs_streamed": t_str / t_egr,
@@ -310,11 +311,14 @@ def run() -> list:
     l2_mode = lat[(lat >= 100) & (lat < 20000)]
     origin_mode = lat[lat >= 20000]
     n = len(lat)
+    from benchmarks.decode_kernels import merge_bench_json
+
     svb = restore_pipeline_configs(store, pop.blobs[0], pop.tenant_key)
     mt = multi_tenant_scenario(store, gc.active)
     svb["multi_tenant"] = mt
-    with open(BENCH_JSON, "w") as f:
-        json.dump(svb, f, indent=2, sort_keys=True)
+    # merge, don't overwrite: decode_kernels.py records its per-backend
+    # throughput table into the same JSON
+    merge_bench_json(svb)
     return [
         dict(name="e2e.batched_speedup", value=svb["speedup_vs_serial"],
              derived=f"cold restore {svb['chunks']} chunks, 36ms origin RTT, "

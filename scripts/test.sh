@@ -21,6 +21,14 @@ if [ "$#" -eq 0 ]; then
         echo "FAIL: benchmark smoke regression (see SMOKE REGRESSION above)" >&2
         exit 1
     fi
+    # decode-kernel gate: every registered backend byte-identical to the
+    # serial oracle and holding at least half its recorded throughput
+    # ratio vs the same-run serial oracle (see decode_kernels.py)
+    if ! PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/decode_kernels.py --smoke; then
+        echo "FAIL: decode kernel smoke regression (see above)" >&2
+        exit 1
+    fi
     exit 0
 fi
 exec python -m pytest -x -q "$@"

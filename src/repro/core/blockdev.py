@@ -732,6 +732,7 @@ class TieredReader:
             "queue_depth": q.maxsize,
             "decode_tiles": dstats["tiles"],
             "eager_flushes": dstats.get("eager_flushes", 0),
+            "eager_holds": dstats.get("eager_holds", 0),
         }
         return out
 

@@ -148,6 +148,15 @@ class LazyPool:
                 weakref.finalize(self, self._pool.shutdown, wait=False)
             return self._pool
 
+    def shutdown(self, wait: bool = True):
+        """Drain and release the current pool (``ImageService.close()``
+        / ``BatchDecoder.close()``). Safe to call repeatedly; a later
+        ``get`` lazily builds a fresh pool."""
+        with self._lock:
+            pool, self._pool, self._size = self._pool, None, 0
+        if pool is not None:
+            pool.shutdown(wait=wait)
+
 
 class RejectingLimiter:
     def __init__(self, max_inflight: int):

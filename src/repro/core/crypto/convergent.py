@@ -54,19 +54,27 @@ def decrypt_chunk(ciphertext: bytes, key: bytes, expect_sha256: bytes) -> bytes:
 
 
 def decrypt_chunks(ciphertexts: list, keys: list, expect_sha256s: list, *,
-                   sha_backend: str = "hashlib", encrypt_many=None) -> list:
+                   sha_backend: str = "hashlib", encrypt_many=None,
+                   sha_many=None) -> list:
     """Batched verify-then-decrypt of N chunks.
 
     Verification is one batched SHA pass over all ciphertexts
     (``sha256v.sha256_many``; ``sha_backend="numpy"`` selects the
-    vectorized lockstep implementation), decryption is one batched
-    T-table pass (``aes.ctr_keystream_many``; ``encrypt_many`` plugs in
-    the ``repro.kernels.aes`` jax variant). Integrity stays per-chunk: a
+    vectorized lockstep implementation, and a ``sha_many`` callable —
+    e.g. the ``repro.kernels.sha256`` Pallas verify kernel — overrides
+    the pass entirely), decryption is one batched block pass
+    (``aes.ctr_keystream_many``; ``encrypt_many`` plugs in a
+    ``repro.kernels.aes`` variant — the XLA T-table pass or the
+    bitsliced Pallas kernel; the decode-backend registry in
+    ``core.decode`` pairs the two hooks). Integrity stays per-chunk: a
     single tampered ciphertext raises ``IntegrityError`` naming every
     offending batch position — no plaintext of a bad chunk is ever
     produced, and verification completes for the whole batch before any
     keystream is generated (verify-THEN-decrypt, batch-wide)."""
-    digests = sha256_many(list(ciphertexts), backend=sha_backend)
+    if sha_many is not None:
+        digests = sha_many(list(ciphertexts))
+    else:
+        digests = sha256_many(list(ciphertexts), backend=sha_backend)
     bad = [i for i, (got, want) in enumerate(zip(digests, expect_sha256s))
            if got != want]
     if bad:

@@ -49,13 +49,35 @@ layout instead
   hashlib both release the GIL, so with the python-per-chunk overhead
   batched away the decode stage finally scales with cores.
 
-Backends:
+Backends — the decode-backend REGISTRY:
 
-* ``"numpy"`` (default): batched T-table AES + hashlib verify.
-* ``"jax"``:   the ``repro.kernels.aes`` jit'd variant of the block pass
-  (single-threaded tiles: XLA manages its own parallelism).
+A decode backend is one named object pairing the two batched kernels of
+the verify-then-decrypt pass (an ``encrypt_many`` AES block pass and a
+``sha_many`` digest pass) with its preferred tile shape and threading
+model. ``BatchDecoder``, ``ReadPolicy.decode_backend``,
+``convergent.decrypt_chunks`` and the serve launcher's
+``--decode-backend`` flag all select one registered backend BY NAME
+instead of threading ``encrypt_many``/``sha_backend`` hooks separately:
+
+* ``"python"`` (alias ``"numpy"``, the default): batched numpy T-table
+  AES + hashlib verify. hashlib releases the GIL and runs at memory
+  bandwidth — the CPU fast path.
+* ``"xla"`` (alias ``"jax"``): the ``repro.kernels.aes`` jit'd T-table
+  gather pass + hashlib verify (single-threaded tiles: XLA manages its
+  own parallelism). The right lowering on GPU, where the byte gather is
+  native.
+* ``"bitsliced"``: the gather-free Pallas kernels — bit-plane AES-CTR
+  (Boyar–Peralta S-box circuit, ``kernels/aes/bitslice_pallas``) +
+  lockstep SHA-256 verify (``kernels/sha256``). The TPU VPU lowering;
+  off-TPU both kernels run under the Pallas interpreter.
+* ``"auto"``: probe the jax platform — ``bitsliced`` on TPU, ``xla`` on
+  GPU, ``python`` on CPU.
 * ``"serial"``: the per-chunk ``decrypt_chunk`` oracle — PR 1's caller-
-  thread behavior, kept for byte-identity tests and benchmarks.
+  thread behavior, kept for byte-identity tests and benchmarks (not a
+  registry object; it bypasses the batched pass entirely).
+
+``benchmarks/decode_kernels.py`` records every registered backend's
+keystream and verify GB/s into BENCH_e2e.json and gates regressions.
 """
 from __future__ import annotations
 
@@ -63,6 +85,7 @@ import os
 import threading
 import time
 import warnings
+from dataclasses import dataclass, field
 
 from repro.core.concurrency import QUEUE_DONE, QUEUE_EMPTY, LazyPool
 from repro.core.crypto import convergent
@@ -70,27 +93,150 @@ from repro.core.telemetry import COUNTERS
 
 DEFAULT_MAX_BATCH_BYTES = 256 << 10
 DEFAULT_THREADS = max(1, min(4, os.cpu_count() or 1))
+DEFAULT_EAGER_MIN_BYTES = 32 << 10
+
+
+# ------------------------------------------------------------- registry
+
+@dataclass
+class DecodeBackend:
+    """One named decode kernel pair: the batched AES block pass + the
+    batched SHA digest pass, with the tile/threading shape they want.
+
+    ``loader`` materializes the two hooks lazily (kernel imports pull
+    jax; constructing the default python backend must not), returning
+    ``(encrypt_many, sha_many)`` where ``None`` selects the numpy
+    T-table core / the ``sha_backend`` string path respectively.
+    ``threads=None`` leaves tile threading to the decoder default;
+    ``1`` means the kernel owns its parallelism (XLA / Pallas)."""
+
+    name: str
+    description: str
+    tile_bytes: int = DEFAULT_MAX_BATCH_BYTES
+    threads: int | None = None
+    loader: object = None
+    _hooks: tuple | None = field(default=None, init=False, repr=False)
+
+    def hooks(self) -> tuple:
+        if self._hooks is None:
+            self._hooks = self.loader() if self.loader else (None, None)
+        return self._hooks
+
+    @property
+    def encrypt_many(self):
+        return self.hooks()[0]
+
+    @property
+    def sha_many(self):
+        return self.hooks()[1]
+
+
+_REGISTRY: dict[str, DecodeBackend] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_backend(backend: DecodeBackend, aliases: tuple = ()) -> None:
+    _REGISTRY[backend.name] = backend
+    for a in aliases:
+        _ALIASES[a] = backend.name
+
+
+def registered_backends() -> dict:
+    """{canonical name: DecodeBackend}, registration order."""
+    return dict(_REGISTRY)
+
+
+def known_backend_names() -> list:
+    """Every name ``BatchDecoder``/``ReadPolicy`` accept: canonical
+    registry names, their legacy aliases, the serial oracle, and the
+    auto probe."""
+    return sorted(set(_REGISTRY) | set(_ALIASES) | {"serial", "auto"})
+
+
+def _auto_backend_name() -> str:
+    import jax
+    plat = jax.default_backend()
+    if plat == "tpu":
+        return "bitsliced"
+    if plat == "gpu":
+        return "xla"
+    return "python"
+
+
+def resolve_backend_name(name: str) -> str:
+    """Canonical registry name for `name` (alias- and auto-resolving;
+    ``"serial"`` passes through). Raises ``ValueError`` on unknowns."""
+    if name == "serial":
+        return "serial"
+    if name == "auto":
+        return _auto_backend_name()
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown decode backend {name!r}; known: "
+                         f"{known_backend_names()}")
+    return name
+
+
+def get_backend(name: str) -> DecodeBackend:
+    """The registered backend object behind `name` (not ``"serial"``)."""
+    return _REGISTRY[resolve_backend_name(name)]
+
+
+def _load_xla():
+    from repro.kernels.aes import encrypt_many_jax
+    return encrypt_many_jax, None
+
+
+def _load_bitsliced():
+    from repro.kernels.aes import encrypt_many_bitsliced
+    from repro.kernels.sha256 import sha256_many_pallas
+    return encrypt_many_bitsliced, sha256_many_pallas
+
+
+register_backend(DecodeBackend(
+    "python", "batched numpy T-table AES + hashlib verify (CPU fast "
+    "path: hashlib releases the GIL and runs at memory bandwidth)"),
+    aliases=("numpy",))
+register_backend(DecodeBackend(
+    "xla", "jit'd XLA T-table gather AES + hashlib verify (GPU: native "
+    "byte gather; single-threaded tiles, XLA owns parallelism)",
+    threads=1, loader=_load_xla), aliases=("jax",))
+register_backend(DecodeBackend(
+    "bitsliced", "gather-free Pallas kernels: bit-plane AES-CTR "
+    "(Boyar-Peralta S-box circuit) + lockstep SHA-256 verify (TPU VPU; "
+    "Pallas interpreter off-TPU)", threads=1, loader=_load_bitsliced))
 
 
 class BatchDecoder:
     """Decodes {name: ciphertext} batches against manifest ChunkRefs."""
 
     def __init__(self, backend: str = "numpy",
-                 max_batch_bytes: int = DEFAULT_MAX_BATCH_BYTES,
+                 max_batch_bytes: int | None = None,
                  threads: int | None = None,
                  sha_backend: str = "hashlib",
-                 eager_flush: bool = False):
-        assert backend in ("numpy", "jax", "serial"), backend
-        self.backend = backend
+                 eager_flush: bool = False,
+                 eager_min_bytes: int | None = None):
+        resolved = resolve_backend_name(backend)     # raises on unknowns
+        # the AS-GIVEN name (aliases included) is what telemetry and
+        # last_batch report — except "auto", which reports its probe
+        self.backend = resolved if backend == "auto" else backend
+        self.backend_obj = _REGISTRY.get(resolved)   # None for "serial"
         self.eager_flush = bool(eager_flush)
+        self.eager_min_bytes = DEFAULT_EAGER_MIN_BYTES \
+            if eager_min_bytes is None else max(0, int(eager_min_bytes))
+        if max_batch_bytes is None:
+            max_batch_bytes = self.backend_obj.tile_bytes \
+                if self.backend_obj else DEFAULT_MAX_BATCH_BYTES
         self.max_batch_bytes = max(1, int(max_batch_bytes))
         self.threads = DEFAULT_THREADS if threads is None else max(1, threads)
         self.sha_backend = sha_backend
         self._encrypt_many = None
-        if backend == "jax":
-            from repro.kernels.aes import encrypt_many_jax
-            self._encrypt_many = encrypt_many_jax
-            self.threads = 1          # XLA owns its own thread pool
+        self._sha_many = None
+        if self.backend_obj is not None:
+            self._encrypt_many, self._sha_many = self.backend_obj.hooks()
+            if self.backend_obj.threads is not None:
+                # the kernel owns its parallelism (XLA / Pallas)
+                self.threads = self.backend_obj.threads
         self._pool = LazyPool()
         self.last_wall_s = 0.0
         # decrypt_batch concurrency detection (the last_wall_s footgun):
@@ -148,8 +294,15 @@ class BatchDecoder:
         else:
             tiles = list(self._split(refs, ciphertexts))
             if len(tiles) > 1 and self.threads > 1:
-                results = list(self._pool.get(self.threads).map(
-                    lambda t: self._decode_tile(t, ciphertexts), tiles))
+                try:
+                    results = list(self._pool.get(self.threads).map(
+                        lambda t: self._decode_tile(t, ciphertexts), tiles))
+                except RuntimeError:
+                    # pool shut down concurrently (service.close() racing
+                    # an in-flight read): decode inline — reads through
+                    # live handles must keep working
+                    results = [self._decode_tile(t, ciphertexts)
+                               for t in tiles]
             else:
                 results = [self._decode_tile(t, ciphertexts) for t in tiles]
             for plains, bad in results:
@@ -193,13 +346,20 @@ class BatchDecoder:
         busy_inline = 0.0
         eager = self.eager_flush and self.backend != "serial"
         eager_flushes = 0
+        eager_holds = 0
 
         def flush():
             nonlocal part, cts, size
             if not part:
                 return
             if pool is not None:
-                futures.append(pool.submit(self._decode_tile_timed, part, cts))
+                try:
+                    futures.append(
+                        pool.submit(self._decode_tile_timed, part, cts))
+                except RuntimeError:
+                    # pool shut down concurrently (service.close()
+                    # racing this stream): fall back to inline decode
+                    results.append(self._decode_tile_timed(part, cts))
             else:
                 results.append(self._decode_tile_timed(part, cts))
             part, cts, size = [], {}, 0
@@ -214,8 +374,17 @@ class BatchDecoder:
                         # partial tile only if decode capacity is
                         # actually idle — when tiles are still in
                         # flight, an early flush just shreds tile
-                        # efficiency without starting any work sooner.
-                        if pool is None or all(f.done() for f in futures):
+                        # efficiency without starting any work sooner —
+                        # AND the partial has accumulated at least
+                        # ``eager_min_bytes``: flushing slivers at scale
+                        # trades the whole tile-batching win for a
+                        # negligible head start (the threshold is the
+                        # ROADMAP item-2 trigger, tuned via
+                        # benchmarks/e2e_read_latency.py).
+                        if size < self.eager_min_bytes:
+                            eager_holds += 1
+                            COUNTERS.inc("decode.eager_holds")
+                        elif pool is None or all(f.done() for f in futures):
                             flush()
                             eager_flushes += 1
                             COUNTERS.inc("decode.eager_flushes")
@@ -268,7 +437,13 @@ class BatchDecoder:
                 sorted(bad_names))
         COUNTERS.add("decode.batched_chunks", len(out))
         return out, {"busy_s": busy, "wall_s": time.perf_counter() - t0,
-                     "tiles": len(results), "eager_flushes": eager_flushes}
+                     "tiles": len(results), "eager_flushes": eager_flushes,
+                     "eager_holds": eager_holds}
+
+    def close(self):
+        """Drain the tile pool (idempotent). Shared decoders are closed
+        by ``ImageService.close()``; in-flight tiles finish first."""
+        self._pool.shutdown()
 
     def _decode_tile_timed(self, part: list, ciphertexts: dict) -> tuple:
         """``_decode_tile`` plus its own wall time (runs on a pool
@@ -286,7 +461,8 @@ class BatchDecoder:
             plains = convergent.decrypt_chunks(
                 cts, [r.key for r in part], [r.sha256 for r in part],
                 sha_backend=self.sha_backend,
-                encrypt_many=self._encrypt_many)
+                encrypt_many=self._encrypt_many,
+                sha_many=self._sha_many)
         except convergent.IntegrityError as e:
             return {}, [part[i].name for i in e.bad_positions]
         return {r.name: p for r, p in zip(part, plains)}, []

@@ -43,6 +43,8 @@ import contextlib
 import hashlib
 import itertools
 import threading
+import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -54,7 +56,13 @@ from repro.core.blockdev import (
     TieredReader,
 )
 from repro.core.concurrency import BlockingLimiter, RejectingLimiter
-from repro.core.decode import DEFAULT_MAX_BATCH_BYTES, BatchDecoder
+from repro.core.decode import (
+    DEFAULT_EAGER_MIN_BYTES,
+    DEFAULT_MAX_BATCH_BYTES,
+    BatchDecoder,
+    known_backend_names,
+    resolve_backend_name,
+)
 from repro.core.layout import (
     ImageLayout,
     ranges_to_chunks,
@@ -89,13 +97,19 @@ class ReadPolicy:
 
     ``parallelism`` — width of the origin fetch pipeline.
     ``max_batch_bytes`` / ``decode_backend`` — decode-stage overrides
-    (``None`` = the service's configured default).
+    (``None`` = the service's configured default). ``decode_backend``
+    names a registered decode backend (``core.decode`` registry:
+    ``python``/``xla``/``bitsliced``, legacy aliases ``numpy``/``jax``,
+    the ``serial`` oracle, or ``auto`` to probe the platform).
     ``queue_depth`` — streamed hand-off queue bound (backpressure).
     ``eager_flush`` — idle-queue opportunistic flush: decode the partial
     tile whenever the consumer would otherwise block on the hand-off
     queue (shrinks the decode tail on small/slow-arriving batches at
     some tile-efficiency cost). Tri-state: ``None`` inherits the
     service default, ``True``/``False`` override it either way.
+    ``eager_min_bytes`` — minimum partial-tile bytes before an eager
+    flush may fire (``None`` = service default): holds tile efficiency
+    at scale by refusing to shred slivers into the pool.
     """
 
     mode: str = "streamed"
@@ -104,14 +118,17 @@ class ReadPolicy:
     decode_backend: str | None = None
     queue_depth: int = DEFAULT_QUEUE_DEPTH
     eager_flush: bool | None = None
+    eager_min_bytes: int | None = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"ReadPolicy.mode must be one of {_MODES}, "
                              f"got {self.mode!r}")
         if self.decode_backend is not None and \
-                self.decode_backend not in ("numpy", "jax", "serial"):
-            raise ValueError(f"unknown decode_backend {self.decode_backend!r}")
+                self.decode_backend not in known_backend_names():
+            raise ValueError(f"unknown decode_backend "
+                             f"{self.decode_backend!r}; known: "
+                             f"{known_backend_names()}")
         if self.parallelism < 1:
             raise ValueError("parallelism must be >= 1")
 
@@ -137,9 +154,11 @@ class ServiceConfig:
     Tier sizing (``l1_bytes=0`` / ``l2_nodes=0`` disables a tier),
     admission control (``max_coldstarts``; 0 = unlimited), origin fetch
     concurrency (``fetch_concurrency``; 0 = unbounded), the decode pool
-    (backend / tile size / threads), the simulated origin RTT for
-    benchmarks, and the default ``ReadPolicy`` applied when a read
-    passes none."""
+    (backend / tile size / threads / eager-flush threshold), session
+    caching (``session_cap`` / ``session_ttl_s`` bound the idle-handle
+    and parsed-manifest caches a churning image population would
+    otherwise grow forever), the simulated origin RTT for benchmarks,
+    and the default ``ReadPolicy`` applied when a read passes none."""
 
     l1_bytes: int = 256 << 20
     l2_nodes: int = 0                   # 0 = no L2 tier
@@ -151,6 +170,10 @@ class ServiceConfig:
     decode_backend: str = "numpy"
     decode_threads: int | None = None
     max_batch_bytes: int = DEFAULT_MAX_BATCH_BYTES
+    eager_min_bytes: int = DEFAULT_EAGER_MIN_BYTES
+    session_cap: int = 64               # LRU session bound (0 = unbounded)
+    session_ttl_s: float | None = None  # None = no idle expiry
+    manifest_cap: int = 128             # LRU manifest bound (0 = unbounded)
     origin_delay_s: float = 0.0
     root: str | None = None             # default root for open()
     default_policy: ReadPolicy = field(default_factory=ReadPolicy)
@@ -212,8 +235,11 @@ class ImageService:
         self.flights = FlightTable()
         self._decoders: dict[tuple, BatchDecoder] = {}
         self._scopes: dict[str, ScopedCounters] = {}
-        self._sessions: dict[tuple, tuple] = {}   # shared reader cache
-        self._manifests: dict[tuple, tuple] = {}  # parsed-manifest cache
+        # LRU session/manifest caches (most-recently-used at the end);
+        # values carry a last-use stamp for the TTL sweep
+        self._sessions: OrderedDict[tuple, list] = OrderedDict()
+        self._manifests: OrderedDict[tuple, list] = OrderedDict()
+        self._closed = False
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------ plumbing
@@ -224,16 +250,28 @@ class ImageService:
         cfg = self.config
         eager = policy.eager_flush if policy.eager_flush is not None \
             else bool(cfg.default_policy.eager_flush)
-        key = (policy.decode_backend or cfg.decode_backend,
+        backend = policy.decode_backend or cfg.decode_backend
+        # the cache key uses the CANONICAL name: aliases ("numpy" /
+        # "python") and the auto probe share one pool instead of
+        # duplicating decoders; the decoder itself keeps the as-given
+        # name for telemetry
+        key = (resolve_backend_name(backend),
                policy.max_batch_bytes or cfg.max_batch_bytes,
-               eager)
+               eager,
+               policy.eager_min_bytes if policy.eager_min_bytes is not None
+               else cfg.eager_min_bytes)
         with self._lock:
             dec = self._decoders.get(key)
             if dec is None:
-                dec = BatchDecoder(key[0], max_batch_bytes=key[1],
+                dec = BatchDecoder(backend, max_batch_bytes=key[1],
                                    threads=cfg.decode_threads,
-                                   eager_flush=key[2])
-                self._decoders[key] = dec
+                                   eager_flush=key[2],
+                                   eager_min_bytes=key[3])
+                # a closed service hands out UNCACHED decoders (reads
+                # through live handles keep working, but nothing new is
+                # pinned that close() can no longer drain)
+                if not self._closed:
+                    self._decoders[key] = dec
             return dec
 
     def tenant_counters(self, tenant: str) -> ScopedCounters:
@@ -247,6 +285,70 @@ class ImageService:
                 sc = self.counters.scope(f"tenant.{tenant}")
                 self._scopes[tenant] = sc
             return sc
+
+    # ---------------------------------------------- session cache plumbing
+    def _cache_lookup(self, cache: OrderedDict, key, counter: str):
+        """LRU+TTL probe (caller holds the lock): refresh and return the
+        entry, or expire it (TTL, ticking `counter` like the insert-path
+        sweep does) and return None."""
+        entry = cache.get(key)
+        if entry is None:
+            return None
+        now = time.monotonic()
+        ttl = self.config.session_ttl_s
+        if ttl is not None and now - entry[-1] > ttl:
+            del cache[key]
+            self.counters.inc(counter)
+            return None
+        entry[-1] = now
+        cache.move_to_end(key)
+        return entry
+
+    def _cache_insert(self, cache: OrderedDict, key, values: tuple,
+                      cap: int, counter: str):
+        """setdefault-style insert (caller holds the lock) + the LRU/TTL
+        sweep: idle entries past ``session_ttl_s`` expire, then the
+        least-recently-used entries beyond `cap` evict. Returns the
+        entry actually cached (a racing builder keeps the first one).
+        On a service that closed mid-open, nothing is pinned — the entry
+        is returned uncached so close() stays the last word."""
+        now = time.monotonic()
+        if self._closed:
+            return list(values) + [now]
+        entry = cache.get(key)
+        if entry is None:
+            entry = list(values) + [now]
+            cache[key] = entry
+        else:
+            entry[-1] = now
+        cache.move_to_end(key)
+        ttl = self.config.session_ttl_s
+        if ttl is not None:
+            for k in [k for k, v in cache.items() if now - v[-1] > ttl]:
+                del cache[k]
+                self.counters.inc(counter)
+        if cap > 0:                     # 0 = unbounded (knob convention)
+            while len(cache) > cap:
+                cache.popitem(last=False)
+                self.counters.inc(counter)
+        return entry
+
+    def close(self):
+        """Shut the service down: evict every cached session and parsed
+        manifest, drain the shared decoder pools (in-flight tiles finish
+        first), and clear the process-wide flight table. Reads through
+        still-live handles keep working — a handle owns its reader —
+        but new ``open()`` calls raise ``RuntimeError``. Idempotent."""
+        with self._lock:
+            self._closed = True
+            decoders = list(self._decoders.values())
+            self._decoders.clear()
+            self._sessions.clear()
+            self._manifests.clear()
+        for dec in decoders:
+            dec.close()
+        with self.flights.lock:
+            self.flights.flights.clear()
 
     @contextlib.contextmanager
     def admission_slot(self):
@@ -275,6 +377,8 @@ class ImageService:
         names the telemetry scope. Handles of the same (image, root,
         tenant) share one ``TieredReader``, so concurrent opens
         single-flight their fetches against each other."""
+        if self._closed:
+            raise RuntimeError("ImageService is closed")
         # parsed-manifest cache: stampeding opens of one image must not
         # re-decrypt the key table and re-decode the layout every time.
         # The cache key includes the tenant key, so a caller with the
@@ -282,19 +386,24 @@ class ImageService:
         # of hitting another tenant's parse.
         mkey = (hashlib.sha256(manifest_blob).digest(), tenant_key)
         with self._lock:
-            parsed = self._manifests.get(mkey)
+            parsed = self._cache_lookup(self._manifests, mkey,
+                                        "service.manifest_evictions")
         if parsed is None:
             manifest = open_manifest(manifest_blob, tenant_key)
             layout = ImageLayout.from_table(manifest.layout_table,
                                             manifest.chunk_size)
             with self._lock:
-                parsed = self._manifests.setdefault(mkey, (manifest, layout))
-        manifest, layout = parsed
+                parsed = self._cache_insert(
+                    self._manifests, mkey, (manifest, layout),
+                    self.config.manifest_cap,
+                    "service.manifest_evictions")
+        manifest, layout = parsed[0], parsed[1]
         root = root or self.config.root or manifest.root_id
         tenant = tenant if tenant is not None else manifest.tenant
         skey = (manifest.image_id, root, tenant)
         with self._lock:
-            cached = self._sessions.get(skey)
+            cached = self._cache_lookup(self._sessions, skey,
+                                        "service.session_evictions")
         if cached is None or decoder is not None:
             scope = self.tenant_counters(tenant)
             reader = TieredReader(
@@ -311,9 +420,10 @@ class ImageService:
                 return ImageHandle(self, manifest, layout, reader,
                                    tenant, scope)
             with self._lock:
-                cached = self._sessions.setdefault(
-                    skey, (manifest, layout, reader, scope))
-        manifest, layout, reader, scope = cached
+                cached = self._cache_insert(
+                    self._sessions, skey, (manifest, layout, reader, scope),
+                    self.config.session_cap, "service.session_evictions")
+        manifest, layout, reader, scope = cached[:4]
         return ImageHandle(self, manifest, layout, reader, tenant, scope)
 
     def snapshot(self) -> dict:
@@ -346,7 +456,7 @@ class ImageHandle:
         service default); ``None`` inherits."""
         p = policy if policy is not None else self.service.config.default_policy
         if p.decode_backend is None and p.max_batch_bytes is None \
-                and p.eager_flush is None:
+                and p.eager_flush is None and p.eager_min_bytes is None:
             return p, self.reader.decoder
         return p, self.service.decoder_for(p)
 

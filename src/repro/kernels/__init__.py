@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def on_tpu() -> bool:
+    """Shared platform probe for the kernel adapters: Pallas kernels
+    compile natively on TPU and fall back to the interpreter elsewhere."""
+    import jax
+    return jax.default_backend() == "tpu"

@@ -1,3 +1,9 @@
-from repro.kernels.aes.ops import ctr_keystream_many_jax, encrypt_many_jax
+from repro.kernels.aes.ops import (
+    ctr_keystream_many_bitsliced,
+    ctr_keystream_many_jax,
+    encrypt_many_bitsliced,
+    encrypt_many_jax,
+)
 
-__all__ = ["ctr_keystream_many_jax", "encrypt_many_jax"]
+__all__ = ["ctr_keystream_many_bitsliced", "ctr_keystream_many_jax",
+           "encrypt_many_bitsliced", "encrypt_many_jax"]

@@ -1,19 +1,23 @@
-"""numpy-facing adapters for the jax batched-AES pass.
+"""numpy-facing adapters for the jax batched-AES passes.
 
-``encrypt_many_jax`` is a drop-in for the ``encrypt_many`` hook of
-``aes.ctr_keystream_many`` (and so of ``convergent.decrypt_chunks`` /
-``core.decode.BatchDecoder(backend="jax")``): same (blocks, per-block
-round keys) -> blocks contract as the numpy core, byte-identical output.
-Batch sizes are padded up to power-of-two buckets so jit compiles once
-per bucket, not once per distinct chunk count.
+``encrypt_many_jax`` (the XLA T-table gather pass) and
+``encrypt_many_bitsliced`` (the gather-free Pallas bit-plane kernel)
+are drop-ins for the ``encrypt_many`` hook of ``aes.ctr_keystream_many``
+(and so of ``convergent.decrypt_chunks`` / the ``core.decode`` backend
+registry): same (blocks, per-block round keys) -> blocks contract as
+the numpy core, byte-identical output. Batch sizes are padded up to
+power-of-two buckets so jit compiles once per bucket, not once per
+distinct chunk count.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.kernels.aes import aesjax
+from repro.kernels import on_tpu
+from repro.kernels.aes import aesjax, bitslice
 
 _MIN_BUCKET = 256
+_MIN_WORDS = 8          # bitsliced lane-word bucket floor (256 blocks)
 
 
 def _bucket(n: int) -> int:
@@ -45,3 +49,38 @@ def ctr_keystream_many_jax(keys: list, nbytes: list,
     from repro.core.crypto import aes
     return aes.ctr_keystream_many(keys, nbytes, ivs,
                                   encrypt_many=encrypt_many_jax)
+
+
+def encrypt_many_bitsliced(blocks_u8: np.ndarray, rks: np.ndarray, *,
+                           interpret: bool | None = None) -> np.ndarray:
+    """(N, 16) uint8 blocks + (N, rounds+1, 4) uint32 per-block round
+    keys -> (N, 16) uint8, through the gather-free bitsliced Pallas
+    kernel: bit-transpose into planes, run the Boyar–Peralta circuit
+    tiles, transpose back. Lane-word counts are bucketed to powers of
+    two so the kernel compiles O(log batch) times. ``interpret=None``
+    auto-selects the Pallas interpreter off-TPU (the CPU fallback)."""
+    n = blocks_u8.shape[0]
+    if n == 0:
+        return np.empty((0, 16), np.uint8)
+    if interpret is None:
+        interpret = not on_tpu()
+    words = _MIN_WORDS
+    while words * 32 < n:
+        words <<= 1
+    blocks_u8, rks = bitslice.broadcast_pad(blocks_u8, rks, words * 32)
+    rounds = rks.shape[1] - 1
+    planes = bitslice.pack_planes(blocks_u8).view(np.int32)
+    rkp = bitslice.pack_round_keys(np.ascontiguousarray(rks)).view(np.int32)
+    from repro.kernels.aes.bitslice_pallas import encrypt_planes_pallas
+    out = encrypt_planes_pallas(planes, rkp, rounds=rounds,
+                                interpret=interpret)
+    return bitslice.unpack_planes(np.asarray(out).view(np.uint32), n)
+
+
+def ctr_keystream_many_bitsliced(keys: list, nbytes: list,
+                                 ivs: list | None = None) -> list:
+    """``aes.ctr_keystream_many`` with the block pass on the bitsliced
+    Pallas kernel — N differently-keyed CTR streams, zero gathers."""
+    from repro.core.crypto import aes
+    return aes.ctr_keystream_many(keys, nbytes, ivs,
+                                  encrypt_many=encrypt_many_bitsliced)

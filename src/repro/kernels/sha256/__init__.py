@@ -1,0 +1,3 @@
+from repro.kernels.sha256.ops import sha256_many_pallas
+
+__all__ = ["sha256_many_pallas"]

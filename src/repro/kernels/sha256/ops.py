@@ -1,0 +1,63 @@
+"""Host adapters for the lockstep SHA-256 Pallas kernel.
+
+``sha256_many_pallas`` is a drop-in for the ``sha_many`` hook of
+``convergent.decrypt_chunks`` (and so of the ``bitsliced`` decode
+backend): list of byte strings in, list of 32-byte digests out,
+byte-identical to hashlib. The batched padding happens host-side ONCE
+(``sha256v._pad``), the schedule words are transposed lane-major, and
+batch dimensions are bucketed (lanes to powers of two, message blocks
+to coarse steps) so the kernel retraces O(log) times, not per shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.crypto.sha256v import _pad
+from repro.kernels import on_tpu
+from repro.kernels.sha256.sha256p import sha256_lanes_pallas
+
+_MIN_LANES = 32
+
+
+def _bucket_lanes(n: int) -> int:
+    b = _MIN_LANES
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _bucket_blocks(b: int) -> int:
+    """Coarse maxb buckets: powers of two up to 16, then multiples of 16
+    (chunk batches are usually same-length, so this compiles once for
+    the common tile shape instead of per distinct message length)."""
+    p = 1
+    while p < min(b, 16):
+        p <<= 1
+    if b <= 16:
+        return p
+    return ((b + 15) // 16) * 16
+
+
+def sha256_many_pallas(datas: list, *, interpret: bool | None = None) -> list:
+    """Digests of N byte strings through the Pallas lockstep kernel.
+    ``interpret=None`` auto-selects the interpreter off-TPU (the CPU
+    fallback); pass False to require the compiled TPU lowering."""
+    n = len(datas)
+    if n == 0:
+        return []
+    if interpret is None:
+        interpret = not on_tpu()
+    padded = [_pad(d) for d in datas]
+    nbl = [len(p) // 64 for p in padded]
+    maxb = _bucket_blocks(max(nbl))
+    lanes = _bucket_lanes(n)
+    words = np.zeros((maxb, 16, lanes), np.uint32)
+    for i, p in enumerate(padded):
+        w = np.frombuffer(p, dtype=">u4").reshape(-1, 16)
+        words[:w.shape[0], :, i] = w
+    nb = np.zeros((1, lanes), np.int32)
+    nb[0, :n] = nbl
+    out = sha256_lanes_pallas(words.view(np.int32), nb, maxb=maxb,
+                              interpret=interpret)
+    dig = np.asarray(out).view(np.uint32).T[:n].astype(">u4")
+    return [dig[i].tobytes() for i in range(n)]

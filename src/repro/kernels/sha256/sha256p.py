@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: lockstep SHA-256 over N message lanes.
+
+The decode stage verifies every fetched ciphertext's SHA-256 before any
+keystream is generated (paper §3.1). ``crypto.sha256v.sha256_many_np``
+is the vectorized lockstep reference: all N messages' compression
+functions advance together as (N,)-shaped uint32 lanes. This kernel is
+that exact round structure — pure 32-bit rotate/xor/add, the shape the
+VPU natively executes — with the lanes on the TPU vector axis:
+
+* input is the padded message schedule transposed to (maxb, 16, N)
+  words, so every round's 16-word window is one contiguous (16, blk)
+  VMEM tile slice;
+* a ``fori_loop`` walks the message blocks; the 64 rounds inside are
+  statically unrolled (the compiler sees one block body);
+* per-lane message lengths are handled exactly like the reference:
+  lanes whose final padded block has been absorbed FREEZE via a masked
+  state update (``nblocks > b``), so one launch hashes mixed-length
+  batches;
+* all arithmetic is int32 (TPU-native; uint32 adds wrap identically in
+  two's complement) — adapters ``.view()`` at the boundary.
+
+``interpret=True`` is the CPU fallback: the same kernel under the
+Pallas interpreter, jit-compiled by XLA. Oracle-tested against hashlib
+across padding boundaries in ``tests/test_bitslice_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.crypto.sha256v import _H0, _K
+
+_K32 = [int(k) for k in _K.view(np.int32)]
+_H032 = [int(h) for h in _H0.view(np.int32)]
+
+LANE_BLOCK = 128           # message lanes per grid step
+
+
+def _rotr(x, n: int):
+    return jax.lax.shift_right_logical(x, n) | jax.lax.shift_left(x, 32 - n)
+
+
+def _shr(x, n: int):
+    return jax.lax.shift_right_logical(x, n)
+
+
+def _sha_kernel(words_ref, nb_ref, out_ref, *, maxb):
+    wv = words_ref[...]                       # (maxb, 16, blk) int32
+    nb = nb_ref[0]                            # (blk,) int32
+
+    def block_body(b, state):
+        wb = jax.lax.dynamic_index_in_dim(wv, b, 0, keepdims=False)
+        w = [wb[t] for t in range(16)]        # (blk,) lanes
+        for t in range(16, 64):
+            s0 = _rotr(w[t - 15], 7) ^ _rotr(w[t - 15], 18) ^ _shr(w[t - 15], 3)
+            s1 = _rotr(w[t - 2], 17) ^ _rotr(w[t - 2], 19) ^ _shr(w[t - 2], 10)
+            w.append(w[t - 16] + s0 + w[t - 7] + s1)
+        a, bb, c, d, e, f, g, h = state
+        for t in range(64):
+            s1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+            ch = (e & f) ^ (~e & g)
+            t1 = h + s1 + ch + jnp.int32(_K32[t]) + w[t]
+            s0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+            maj = (a & bb) ^ (a & c) ^ (bb & c)
+            t2 = s0 + maj
+            a, bb, c, d, e, f, g, h = t1 + t2, a, bb, c, d + t1, e, f, g
+        new = (a, bb, c, d, e, f, g, h)
+        active = nb > b                       # frozen lanes keep state
+        return tuple(jnp.where(active, s + n_, s)
+                     for s, n_ in zip(state, new))
+
+    zeros = jnp.zeros_like(nb)
+    state0 = tuple(zeros + jnp.int32(h) for h in _H032)
+    state = jax.lax.fori_loop(0, maxb, block_body, state0)
+    for i in range(8):
+        out_ref[i] = state[i]
+
+
+@functools.partial(jax.jit, static_argnames=("maxb", "interpret", "block"))
+def sha256_lanes_pallas(words: jax.Array, nblocks: jax.Array, *,
+                        maxb: int, interpret: bool = False,
+                        block: int = LANE_BLOCK) -> jax.Array:
+    """words: (maxb, 16, N) int32 big-endian schedule words (zero past
+    each lane's final block); nblocks: (1, N) int32 blocks per lane.
+    Returns (8, N) int32 digest words. N must split into power-of-two
+    lane tiles (callers bucket; see ``ops.sha256_many_pallas``)."""
+    n = words.shape[-1]
+    blk = min(block, n)
+    while n % blk:
+        blk //= 2
+    grid = (n // blk,)
+    return pl.pallas_call(
+        functools.partial(_sha_kernel, maxb=maxb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((maxb, 16, blk), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((8, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, n), jnp.int32),
+        interpret=interpret,
+    )(words, nblocks)

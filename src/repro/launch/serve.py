@@ -41,9 +41,20 @@ def main():
                          "all restores (BlockingLimiter); 0 = unbounded")
     ap.add_argument("--parallelism", type=int, default=8,
                     help="per-restore fetch pipeline width")
+    from repro.core.decode import known_backend_names
+
     ap.add_argument("--decode-backend", default="numpy",
-                    choices=["numpy", "jax", "serial"],
-                    help="post-fetch batch decode backend")
+                    choices=known_backend_names(),
+                    help="post-fetch batch decode backend from the "
+                         "core.decode registry: python/numpy = T-table "
+                         "AES + hashlib; xla/jax = jit'd gather pass; "
+                         "bitsliced = gather-free Pallas AES + lockstep "
+                         "SHA verify kernels; auto = probe the "
+                         "platform; serial = per-chunk oracle")
+    ap.add_argument("--eager-min-bytes", type=int, default=None,
+                    help="minimum partial-tile bytes before an eager "
+                         "flush may fire (default: ServiceConfig's "
+                         "tuned threshold)")
     ap.add_argument("--read-path", default="streamed",
                     choices=["streamed", "staged", "serial"],
                     help="ReadPolicy.mode: streamed = decode tiles overlap "
@@ -91,8 +102,9 @@ def main():
     # admission control (reject excess cold starts) and fetch concurrency
     # (block excess origin reads) are separate bounds (§4.2)
     policy = ReadPolicy(mode=args.read_path, parallelism=args.parallelism,
-                        eager_flush=args.eager_flush)
-    service = ImageService(store, ServiceConfig(
+                        eager_flush=args.eager_flush,
+                        eager_min_bytes=args.eager_min_bytes)
+    svc_cfg = ServiceConfig(
         l1_bytes=args.l1_bytes,
         l2_nodes=args.l2_nodes,
         max_coldstarts=args.max_coldstarts,
@@ -100,7 +112,10 @@ def main():
         decode_backend=args.decode_backend,
         root=root,
         default_policy=policy,
-    ))
+    )
+    if args.eager_min_bytes is not None:
+        svc_cfg.eager_min_bytes = args.eager_min_bytes
+    service = ImageService(store, svc_cfg)
     t0 = time.time()
     engine, stats = cold_start(model, blob, key, service, policy=policy,
                                max_batch=4, max_len=64)
@@ -127,6 +142,7 @@ def main():
           f"({run['seconds']:.2f}s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out}")
+    service.close()        # drain decoder pools + session caches
 
 
 if __name__ == "__main__":

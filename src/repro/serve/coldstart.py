@@ -57,10 +57,14 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, service, *,
     keywords) builds a private single-image service per call — kept for
     the byte-identity oracles; `limiter` becomes the private service's
     admission limiter."""
+    private_service = None
     if not isinstance(service, ImageService):
         service = single_image_service(service, l1=l1, l2=l2,
                                        fetch_limiter=fetch_limiter)
         service.admission = limiter
+        # a per-call private service would leak its decoder pool and
+        # session cache once the restore is done; close it on the way out
+        private_service = service
         if policy is None:
             policy = ReadPolicy.from_legacy(
                 batched=batched if batched is not None else True,
@@ -74,6 +78,17 @@ def cold_start(model, manifest_blob: bytes, tenant_key: bytes, service, *,
                         "the legacy l1/l2/limiter/fetch_limiter/decoder/"
                         "parallelism/batched/streamed keywords only apply "
                         "to the deprecated raw-store calling convention")
+    try:
+        return _cold_start_admitted(model, manifest_blob, tenant_key,
+                                    service, root, tenant, policy,
+                                    max_batch, max_len, decoder)
+    finally:
+        if private_service is not None:
+            private_service.close()
+
+
+def _cold_start_admitted(model, manifest_blob, tenant_key, service, root,
+                         tenant, policy, max_batch, max_len, decoder):
     with service.admission_slot():
         t0 = time.time()
         handle = service.open(manifest_blob, tenant_key, root=root,

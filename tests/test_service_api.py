@@ -500,3 +500,151 @@ def test_imagereader_shim_equals_service(tmp_path):
     assert shim.shard_chunks(sl) == h.shard_chunks(sl)
     assert np.array_equal(shim.tensor_shard("base", sl["base"]),
                           h.tensor_shard("base", sl["base"]))
+
+
+# ------------------------------------------- session LRU+TTL + close()
+
+def _make_images(store, root, n, *, seed=11):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        tree = {"w": rng.standard_normal((512,)).astype(np.float32)}
+        blob, _ = create_image(tree, tenant="churn", tenant_key=b"C" * 32,
+                               store=store, root=root, chunk_size=CS,
+                               image_id=f"churn{i}")
+        out.append((tree, blob))
+    return out
+
+
+def test_session_cache_lru_evicts_under_churn(tmp_path):
+    """A churning image population stays bounded: the session and
+    manifest caches never exceed their caps, evictions tick telemetry,
+    and every restore stays byte-identical regardless of eviction."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = _make_images(store, gc.active, 12)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0, session_cap=4, manifest_cap=4))
+    before = COUNTERS.get("service.session_evictions")
+    for _round in range(2):
+        for tree, blob in images:
+            flat = svc.open(blob, b"C" * 32).restore_tree()
+            assert np.array_equal(flat["w"], np.asarray(tree["w"]))
+            assert len(svc._sessions) <= 4
+            assert len(svc._manifests) <= 4
+    assert COUNTERS.get("service.session_evictions") - before >= 8
+    # the hottest (most recent) session survived; re-opening it does
+    # not rebuild a reader
+    _, blob = images[-1]
+    h1 = svc.open(blob, b"C" * 32)
+    h2 = svc.open(blob, b"C" * 32)
+    assert h1.reader is h2.reader
+
+
+def test_session_ttl_expires_idle_handles(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = _make_images(store, gc.active, 2)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0, session_ttl_s=0.05))
+    _, blob = images[0]
+    h1 = svc.open(blob, b"C" * 32)
+    assert svc.open(blob, b"C" * 32).reader is h1.reader   # within TTL
+    time.sleep(0.08)
+    h2 = svc.open(blob, b"C" * 32)                          # expired
+    assert h2.reader is not h1.reader
+    # the expired handle keeps working (it owns its reader)
+    flat = h1.restore_tree()
+    assert np.array_equal(flat["w"], np.asarray(images[0][0]["w"]))
+
+
+def test_service_close_drains_and_rejects_new_opens(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    images = _make_images(store, gc.active, 2)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0))
+    _, blob = images[0]
+    h = svc.open(blob, b"C" * 32)
+    h.restore_tree()                      # spin the decode pool up
+    dec = h.reader.decoder
+    assert dec._pool._pool is not None
+    svc.close()
+    assert dec._pool._pool is None        # pool drained
+    assert svc._sessions == {} and svc._manifests == {}
+    assert svc.flights.flights == {}
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.open(blob, b"C" * 32)
+    svc.close()                           # idempotent
+    # live handles still read after close (they own their reader); a
+    # decode re-spins the lazy pool privately
+    flat = h.restore_tree()
+    assert np.array_equal(flat["w"], np.asarray(images[0][0]["w"]))
+
+
+def test_eager_min_bytes_holds_small_partials(tmp_path):
+    """The smarter eager trigger: with the threshold above the image
+    size, idle-queue flushes HOLD (telemetry: eager_holds) and the tile
+    structure matches plain streaming; with a zero threshold the old
+    flush-on-any-idle behavior returns."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(6)
+    tree = {"w": rng.standard_normal((CS * 8 // 4,)).astype(np.float32)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"E" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+
+    def run(eager_min):
+        svc = ImageService(store, ServiceConfig(
+            l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+            origin_delay_s=0.01, max_batch_bytes=64 << 20,
+            eager_min_bytes=eager_min))
+        h = svc.open(blob, b"E" * 32)
+        flat = h.restore_tree(policy=ReadPolicy(
+            mode="streamed", parallelism=2, eager_flush=True))
+        assert np.array_equal(flat["w"], np.asarray(tree["w"]))
+        return h.reader.last_batch
+
+    lb_hold = run(1 << 30)
+    assert lb_hold["eager_flushes"] == 0
+    assert lb_hold["decode_tiles"] == 1   # tile efficiency preserved
+    lb_zero = run(0)
+    assert lb_zero["eager_flushes"] >= 1
+    assert lb_zero["decode_tiles"] > 1
+
+
+def test_close_racing_inflight_streamed_read_still_byte_identical(tmp_path):
+    """close() mid-restore must not break the in-flight read: the
+    decoder falls back to inline decode when its pool is shut down
+    under it ('live handles keep working'), and nothing re-pins state
+    into the closed service."""
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(8)
+    tree = {"w": rng.standard_normal((CS * 16 // 4,)).astype(np.float32)}
+    blob, _ = create_image(tree, tenant="t", tenant_key=b"R" * 32,
+                           store=store, root=gc.active, chunk_size=CS)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+        origin_delay_s=0.005, max_batch_bytes=CS))
+    h = svc.open(blob, b"R" * 32)
+    out, errs = [], []
+
+    def read():
+        try:
+            out.append(h.restore_tree(policy=ReadPolicy(
+                mode="streamed", parallelism=2)))
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    t = threading.Thread(target=read)
+    t.start()
+    time.sleep(0.01)                    # land mid-stream
+    svc.close()
+    t.join()
+    assert not errs, errs
+    assert np.array_equal(out[0]["w"], np.asarray(tree["w"]))
+    assert svc._sessions == {} and svc._decoders == {}
