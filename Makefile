@@ -14,3 +14,6 @@ bench-read:      ## Fig 11 + restore trajectory + multi-tenant scenario -> BENCH
 
 bench-decode:    ## per-decode-backend keystream/verify GB/s -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py decode_kernels
+
+bench-fault:     ## §4 resilience: mid-restore faults, hedged GETs, 100-tenant Zipf -> BENCH_e2e.json
+	PYTHONPATH=src:. python benchmarks/run.py fault_injection

@@ -1,0 +1,413 @@
+"""Fault-injection scenarios for the resilient L2 (paper §4's headline:
+the AZ cache survives node loss and hotspots without amplifying load).
+
+Three scenario families, all recorded into BENCH_e2e.json:
+
+* **Fault modes** — the SAME streamed restore under ``healthy``,
+  ``crashed`` (one stripe node killed MID-restore), and
+  ``crashed+blackholed`` (a second node goes silent mid-restore, so the
+  per-stripe deadline — not a hang — bounds its cost). Every trial's
+  bytes are checked against the serial oracle: a crashed node must be
+  invisible (4-of-5 erasure absorbs one lost stripe), and the
+  two-failure mode may fall back to origin but NEVER changes bytes.
+  p50/p99 restore wall plus origin traffic are recorded per mode.
+* **Hedged vs unhedged GETs** — two slow-degraded nodes (per-request
+  stall mode), the same chunk set fetched both ways; hedging must cut
+  the p99 L2 fetch latency (the Tail-at-Scale result: a straggler races
+  one fresh draw) at a small, telemetry-counted extra-GET cost.
+* **~100-tenant Zipf scenario** — 100 tenants with per-tenant sealed
+  manifests over 4 shared base lineages, a Zipf image-popularity trace
+  driven through ONE shared service + L2 with hot-key salting on:
+  cross-tenant convergent dedup bounds origin traffic by the unique
+  chunk union, and the trace's hot base chunks cross the infection
+  threshold and get salted across placement keys.
+
+``--smoke`` is the CI gate (scripts/test.sh / make verify): hard
+non-zero exit if a crashed stripe node changes restored bytes or drops
+the L2 hit rate below the healthy-run ratio, or if the two-failure mode
+breaks byte identity.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.cache.distributed import DistributedCache, FaultPlan
+from repro.core.gc import GenerationalGC
+from repro.core.loader import ImageReader, create_image
+from repro.core.service import ImageService, ReadPolicy, ServiceConfig
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+
+TENANT_KEY = b"F" * 32
+PARALLELISM = 8
+
+
+def _build_image(store, root, *, chunks=96, chunk_size=8192, seed=3):
+    """One all-unique image of `chunks` chunks (random floats: no zero
+    elision, no intra-image dedup — every chunk really travels)."""
+    rng = np.random.default_rng(seed)
+    tree = {"w": rng.standard_normal(
+        (chunks * chunk_size // 4,)).astype(np.float32)}
+    blob, stats = create_image(tree, tenant="fault", tenant_key=TENANT_KEY,
+                               store=store, root=root, chunk_size=chunk_size)
+    return tree, blob, stats
+
+
+def _service(store, l2, l1_bytes=32 << 20) -> ImageService:
+    """A fresh service with its own COLD L1 sharing the given L2, so
+    each trial's reads actually reach the stripe layer."""
+    return ImageService(store, ServiceConfig(
+        l1_bytes=l1_bytes, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0), l2=l2)
+
+
+class _FlipMidRestore:
+    """Flip one node's fault plan after its `after`-th stripe GET of the
+    current phase — a deterministic MID-restore failure: the node has
+    already served part of the stripe wave when it dies, so in-flight
+    chunks see the transition, not a pre-failed cluster."""
+
+    def __init__(self, node, plan: FaultPlan, after: int = 4):
+        self.node, self.plan, self.after = node, plan, after
+        self.calls = 0
+        self._lock = threading.Lock()
+        self._orig = node.get
+
+    def install(self):
+        def get(key, touch=True):
+            with self._lock:
+                self.calls += 1
+                if self.calls == self.after:
+                    self.node.set_fault(self.plan)
+            return self._orig(key, touch=touch)
+        self.node.get = get
+
+    def uninstall(self):
+        del self.node.get
+
+
+def _heal(l2: DistributedCache):
+    for node in l2.nodes.values():
+        node.set_fault(FaultPlan.healthy())
+
+
+def _flips_for(l2: DistributedCache, mode: str) -> list:
+    names = sorted(l2.nodes)
+    flips = []
+    if mode in ("crashed", "crashed+blackholed"):
+        flips.append(_FlipMidRestore(l2.nodes[names[0]],
+                                     FaultPlan.crashed()))
+    if mode == "crashed+blackholed":
+        flips.append(_FlipMidRestore(l2.nodes[names[1]],
+                                     FaultPlan.blackholed()))
+    return flips
+
+
+def fault_mode_scenarios(store, blob, oracle, l2, *, trials=7) -> dict:
+    """Streamed restore under each fault mode: byte identity vs the
+    serial `oracle` every trial, p50/p99 restore wall and origin/L2
+    traffic per mode."""
+    results = {}
+    for mode in ("healthy", "crashed", "crashed+blackholed"):
+        walls = []
+        before = COUNTERS.snapshot()
+        for _trial in range(trials):
+            _heal(l2)
+            flips = _flips_for(l2, mode)
+            for f in flips:
+                f.install()
+            try:
+                h = _service(store, l2).open(blob, TENANT_KEY)
+                t0 = time.perf_counter()
+                flat = h.restore_tree(policy=ReadPolicy(
+                    mode="streamed", parallelism=PARALLELISM))
+                walls.append(time.perf_counter() - t0)
+            finally:
+                for f in flips:
+                    f.uninstall()
+            for name in oracle:
+                assert np.array_equal(flat[name], oracle[name]), \
+                    f"{mode}: restored bytes diverged on {name}"
+        after = COUNTERS.snapshot()
+        _heal(l2)
+
+        def delta(name):
+            return after.get(name, 0.0) - before.get(name, 0.0)
+
+        hits, misses = delta("l2.hits"), delta("l2.misses")
+        results[mode] = {
+            "trials": trials,
+            "restore_p50_ms": float(np.percentile(walls, 50) * 1e3),
+            "restore_p99_ms": float(np.percentile(walls, 99) * 1e3),
+            "origin_fetches": delta("read.origin_fetches"),
+            "l2_hits": hits,
+            "l2_misses": misses,
+            "l2_hit_rate": hits / max(1.0, hits + misses),
+            "stripe_timeouts": delta("l2.stripe_timeouts"),
+            "byte_identical": True,
+        }
+    return results
+
+
+def hedging_comparison(l2, names, chunk_len, *, slow_nodes=2,
+                       passes=6, quantile=0.9) -> dict:
+    """p99 L2 fetch latency, unhedged vs hedged, under a slow-degraded
+    plan on `slow_nodes` nodes (per-REQUEST stall mode — each request is
+    an independent draw, which is exactly why racing a second request
+    cuts the stall tail)."""
+    node_names = sorted(l2.nodes)
+    for nm in node_names[:slow_nodes]:
+        l2.nodes[nm].set_fault(FaultPlan.slow(mult=3.0, stall_p=0.3,
+                                              stall_mult=25.0))
+    old_q = l2.hedge_quantile
+    l2.hedge_quantile = quantile
+    before = COUNTERS.snapshot()
+    try:
+        unhedged, hedged = [], []
+        for _ in range(passes):
+            res = l2.get_chunks(names, chunk_len, hedge=False)
+            unhedged += [lat for lat, v in res.values() if v is not None]
+        mid = COUNTERS.snapshot()
+        for _ in range(passes):
+            res = l2.get_chunks(names, chunk_len, hedge=True)
+            hedged += [lat for lat, v in res.values() if v is not None]
+        after = COUNTERS.snapshot()
+    finally:
+        l2.hedge_quantile = old_q
+        _heal(l2)
+    total_gets = passes * len(names) * l2.coder.n
+    hedges = after.get("l2.hedges", 0.0) - mid.get("l2.hedges", 0.0)
+    return {
+        "slow_nodes": slow_nodes,
+        "hedge_quantile": quantile,
+        "samples_per_arm": len(unhedged),
+        "unhedged_p50_ms": float(np.percentile(unhedged, 50) * 1e3),
+        "unhedged_p99_ms": float(np.percentile(unhedged, 99) * 1e3),
+        "hedged_p50_ms": float(np.percentile(hedged, 50) * 1e3),
+        "hedged_p99_ms": float(np.percentile(hedged, 99) * 1e3),
+        "p99_speedup": float(np.percentile(unhedged, 99) /
+                             max(np.percentile(hedged, 99), 1e-12)),
+        "hedges": hedges,
+        "hedge_wins": after.get("l2.hedge_wins", 0.0) -
+        mid.get("l2.hedge_wins", 0.0),
+        # constant-work honesty: extra requests as a fraction of the
+        # constant n-per-chunk GET load
+        "hedge_overhead_fraction": hedges / max(1.0, total_gets),
+        "sanity_unhedged_gets_per_chunk": l2.coder.n,
+    }
+
+
+def zipf_tenant_scenario(*, n_tenants=100, trace_len=240,
+                         infection_threshold=50, salt_count=3) -> dict:
+    """~100 tenants, Zipf image popularity, ONE shared service + L2 with
+    hot-key salting on and no L1 (every read reaches the stripe layer,
+    so popularity concentrates on the hot base chunks' placement nodes
+    — the infection scenario salting exists for)."""
+    from benchmarks.workload import build_tenant_population, zipf_image_trace
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-zipf-"))
+    gc = GenerationalGC(store)
+    pop = build_tenant_population(store, gc.active, n_tenants=n_tenants)
+    l2 = DistributedCache(num_nodes=10, mem_bytes=16 << 20,
+                          flash_bytes=256 << 20, seed=21,
+                          infection_threshold=infection_threshold,
+                          salt_count=salt_count)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=0, l2_nodes=0, fetch_concurrency=16, max_coldstarts=0),
+        l2=l2)
+    trace = zipf_image_trace(n_tenants, trace_len, seed=13)
+    before = COUNTERS.snapshot()
+    t0 = time.perf_counter()
+    for idx in trace:
+        h = svc.open(pop.blobs[idx], pop.keys[idx])
+        h.restore_tree(policy=ReadPolicy(mode="streamed",
+                                         parallelism=PARALLELISM))
+    wall = time.perf_counter() - t0
+    after = COUNTERS.snapshot()
+    svc.close()
+
+    def delta(name):
+        return after.get(name, 0.0) - before.get(name, 0.0)
+
+    hits, misses = delta("l2.hits"), delta("l2.misses")
+    naive = sum(pop.stats[i].total_chunks - pop.stats[i].zero_chunks
+                for i in trace)
+    unique_union = sum(s.unique_chunks for s in pop.stats)
+    # GET spread across stripe nodes: salting should keep the hottest
+    # node's share of served GETs bounded (reads round-robin over salts)
+    gets = sorted((len(nd.get_lat.samples) for nd in l2.nodes.values()),
+                  reverse=True)
+    return {
+        "tenants": n_tenants,
+        "trace_len": trace_len,
+        "infection_threshold": infection_threshold,
+        "salt_count": salt_count,
+        "wall_s": wall,
+        "origin_fetches": delta("read.origin_fetches"),
+        "naive_chunk_fetches": naive,
+        "unique_chunks": unique_union,
+        "origin_traffic_fraction": delta("read.origin_fetches") /
+        max(1, naive),
+        "l2_hits": hits,
+        "l2_misses": misses,
+        "l2_hit_rate": hits / max(1.0, hits + misses),
+        "salted_chunks": delta("l2.salted_chunks"),
+        "salted_reads": delta("l2.salted_reads"),
+        "salt_fanout_puts": delta("l2.salt_fanout_puts"),
+        "hottest_node_get_share": gets[0] / max(1, sum(gets)),
+    }
+
+
+def run() -> list:
+    from benchmarks.decode_kernels import merge_bench_json
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-fault-"))
+    gc = GenerationalGC(store)
+    tree, blob, stats = _build_image(store, gc.active, chunks=96)
+    oracle = ImageReader(blob, TENANT_KEY, store).restore_tree(batched=False)
+    for n in tree:
+        assert np.array_equal(oracle[n], np.asarray(tree[n])), n
+
+    l2 = DistributedCache(num_nodes=10, mem_bytes=32 << 20,
+                          flash_bytes=256 << 20, seed=11)
+    # warm the L2 (and the stripe-latency window) through one restore
+    warm = _service(store, l2).open(blob, TENANT_KEY)
+    warm.restore_tree(policy=ReadPolicy(mode="streamed",
+                                        parallelism=PARALLELISM))
+
+    modes = fault_mode_scenarios(store, blob, oracle, l2)
+    chunk_names = [c.name for c in warm.manifest.chunks]
+    hedge = hedging_comparison(l2, chunk_names, warm.manifest.chunk_size)
+    zipf = zipf_tenant_scenario()
+
+    payload = dict(modes)
+    payload["hedging"] = hedge
+    payload["zipf_100_tenants"] = zipf
+    merge_bench_json({"fault_injection": payload})
+
+    two = modes["crashed+blackholed"]
+    return [
+        dict(name="fault.crashed_restore_p99_ms",
+             value=modes["crashed"]["restore_p99_ms"],
+             derived=f"1 stripe node killed MID-streamed-restore, "
+                     f"{modes['crashed']['trials']} trials: byte-identical "
+                     f"to serial oracle, L2 hit rate "
+                     f"{modes['crashed']['l2_hit_rate']:.3f} (healthy "
+                     f"{modes['healthy']['l2_hit_rate']:.3f}), p50 "
+                     f"{modes['crashed']['restore_p50_ms']:.0f}ms"),
+        dict(name="fault.crashed_blackholed_restore_p99_ms",
+             value=two["restore_p99_ms"],
+             derived=f"1 crashed + 1 blackholed mid-restore: byte-identical "
+                     f"via origin fallback ({two['origin_fetches']:.0f} "
+                     f"origin fetches, {two['stripe_timeouts']:.0f} stripe "
+                     f"timeouts, L2 hit rate {two['l2_hit_rate']:.3f})"),
+        dict(name="fault.hedged_p99_speedup", value=hedge["p99_speedup"],
+             derived=f"slow-degraded plan on {hedge['slow_nodes']} nodes: "
+                     f"L2 fetch p99 {hedge['unhedged_p99_ms']:.2f}ms "
+                     f"unhedged -> {hedge['hedged_p99_ms']:.2f}ms hedged "
+                     f"(q={hedge['hedge_quantile']}, "
+                     f"{hedge['hedges']:.0f} hedges = "
+                     f"{hedge['hedge_overhead_fraction']*100:.1f}% extra "
+                     f"GETs, {hedge['hedge_wins']:.0f} wins)"),
+        dict(name="fault.zipf_origin_traffic_fraction",
+             value=zipf["origin_traffic_fraction"],
+             derived=f"{zipf['tenants']} tenants, Zipf trace of "
+                     f"{zipf['trace_len']} restores, no L1: "
+                     f"{zipf['origin_fetches']:.0f} origin fetches of "
+                     f"{zipf['naive_chunk_fetches']} naive (unique union "
+                     f"{zipf['unique_chunks']}); L2 hit rate "
+                     f"{zipf['l2_hit_rate']:.3f}; {zipf['salted_chunks']:.0f} "
+                     f"chunks salted, {zipf['salted_reads']:.0f} salted "
+                     f"reads, hottest node served "
+                     f"{zipf['hottest_node_get_share']*100:.1f}% of GETs"),
+    ]
+
+
+def smoke(chunks: int = 24) -> None:
+    """Fast tier-1 gate (scripts/test.sh, make verify): kill and
+    blackhole stripe nodes mid-streamed-restore and HARD-FAIL (non-zero
+    exit) if a crashed node changes restored bytes or drops the L2 hit
+    rate below the healthy-run ratio, or if the two-failure mode breaks
+    byte identity."""
+    import sys
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-fault-smoke-"))
+    gc = GenerationalGC(store)
+    tree, blob, stats = _build_image(store, gc.active, chunks=chunks,
+                                     chunk_size=4096)
+    oracle = ImageReader(blob, TENANT_KEY, store).restore_tree(batched=False)
+    l2 = DistributedCache(num_nodes=8, mem_bytes=16 << 20,
+                          flash_bytes=128 << 20, seed=5)
+    # warm the L2 from origin once; every phase below gets a cold L1
+    _service(store, l2).open(blob, TENANT_KEY).restore_tree(
+        policy=ReadPolicy(mode="streamed"))
+
+    failures = []
+
+    def phase(mode: str) -> dict:
+        _heal(l2)
+        flips = _flips_for(l2, mode)
+        for f in flips:
+            f.install()
+        before = COUNTERS.snapshot()
+        try:
+            flat = _service(store, l2).open(blob, TENANT_KEY).restore_tree(
+                policy=ReadPolicy(mode="streamed"))
+        finally:
+            for f in flips:
+                f.uninstall()
+        after = COUNTERS.snapshot()
+        _heal(l2)
+        for name in oracle:
+            if not np.array_equal(flat[name], oracle[name]):
+                failures.append(f"{mode}: restored bytes diverged on {name}")
+        hits = after.get("l2.hits", 0.0) - before.get("l2.hits", 0.0)
+        misses = after.get("l2.misses", 0.0) - before.get("l2.misses", 0.0)
+        return {"hit_rate": hits / max(1.0, hits + misses),
+                "origin": after.get("read.origin_fetches", 0.0) -
+                before.get("read.origin_fetches", 0.0),
+                "timeouts": after.get("l2.stripe_timeouts", 0.0) -
+                before.get("l2.stripe_timeouts", 0.0)}
+
+    healthy = phase("healthy")
+    crashed = phase("crashed")
+    two = phase("crashed+blackholed")
+    # one crashed node must be INVISIBLE: 4-of-5 erasure absorbs one
+    # lost stripe, so the L2 hit rate must not drop below the healthy
+    # run's ratio (allow float-ratio noise only)
+    if crashed["hit_rate"] < healthy["hit_rate"] - 1e-9:
+        failures.append(
+            f"crashed-node L2 hit rate {crashed['hit_rate']:.3f} fell below "
+            f"healthy {healthy['hit_rate']:.3f}")
+    if two["origin"] > 0 and two["hit_rate"] >= 1.0:
+        failures.append("two-failure mode claims full L2 hit rate AND "
+                        "origin traffic — accounting inconsistent")
+    if failures:
+        print("FAULT INJECTION SMOKE REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print(f"FAULT INJECTION OK: {chunks}-chunk streamed restore "
+          f"byte-identical to serial oracle under mid-restore faults; "
+          f"healthy hit rate {healthy['hit_rate']:.3f}, 1-crash "
+          f"{crashed['hit_rate']:.3f} (origin {crashed['origin']:.0f}), "
+          f"crash+blackhole {two['hit_rate']:.3f} (origin "
+          f"{two['origin']:.0f}, {two['timeouts']:.0f} stripe timeouts)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast fault-injection gate (tier-1)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['value']:.6g},\"{row['derived']}\"")

@@ -12,6 +12,8 @@ BENCHES = [
     ("erasure_latency", "Fig 9 4-of-5 vs 4-of-4"),
     ("l2_latency", "Fig 10 L2 GET/PUT latency"),
     ("e2e_read_latency", "Fig 11 end-to-end read modes"),
+    ("fault_injection", "§4 resilience: mid-restore faults, hedged GETs, "
+                        "100-tenant Zipf"),
     ("decode_kernels", "per-backend keystream/verify GB/s (registry)"),
     ("parity_kernel", "Listings 1/2 parity vectorization"),
     ("coldstart", "cold-start scale-out"),

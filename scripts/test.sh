@@ -29,6 +29,14 @@ if [ "$#" -eq 0 ]; then
         echo "FAIL: decode kernel smoke regression (see above)" >&2
         exit 1
     fi
+    # fault-injection gate: a stripe node crashed/blackholed MID-streamed-
+    # restore must not change restored bytes, and one crashed node must
+    # not drop the L2 hit rate below the healthy-run ratio
+    if ! PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/fault_injection.py --smoke; then
+        echo "FAIL: fault-injection smoke regression (see above)" >&2
+        exit 1
+    fi
     exit 0
 fi
 exec python -m pytest -x -q "$@"

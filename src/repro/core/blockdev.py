@@ -195,9 +195,11 @@ class TieredReader:
         # batch would put thread start/join on the demand-paging hot path
         self._fetch_pool = LazyPool()
         # can the L2 feed the stream per-chunk (get_chunks(on_ready=...))?
+        # can it hedge straggler stripes (get_chunks(hedge=...))?
         l2_get = getattr(l2, "get_chunks", None)
-        self._l2_streams = bool(l2_get) and \
-            "on_ready" in inspect.signature(l2_get).parameters
+        l2_params = inspect.signature(l2_get).parameters if l2_get else {}
+        self._l2_streams = "on_ready" in l2_params
+        self._l2_hedges = "hedge" in l2_params
 
     # ------------------------------------------------------------- chunks
     def _fetch_cipher(self, ref) -> tuple[bytes, float]:
@@ -280,7 +282,8 @@ class TieredReader:
     # ------------------------------------------------- stage F: fetch I/O
     def fetch_ciphertexts(self, indices,
                           parallelism: int = DEFAULT_PARALLELISM,
-                          sink: BoundedQueue | None = None) -> FetchedBatch:
+                          sink: BoundedQueue | None = None,
+                          l2_hedge: bool | None = None) -> FetchedBatch:
         """Fetch-I/O-only stage: pull every distinct chunk name of
         `indices` into memory as CIPHERTEXT, nothing decrypted.
 
@@ -298,7 +301,11 @@ class TieredReader:
         flights in arrival order — so a downstream ``decrypt_stream``
         decodes while this stage is still fetching. ``sink.put`` blocks
         when the queue is full (backpressure); see the module docstring
-        for the full streaming contract."""
+        for the full streaming contract.
+
+        ``l2_hedge`` overrides the L2's hedged-GET default for this
+        batch (None = inherit the cache's ``hedge_quantile`` setting);
+        it is forwarded only when the L2 supports it."""
         fb = FetchedBatch(sink)
         for i in sorted(set(int(i) for i in indices)):
             ref = self._refs[i]
@@ -335,7 +342,7 @@ class TieredReader:
                 else:
                     follow[name] = flight
         if lead:
-            self._fetch_leaders(lead, parallelism, fb)
+            self._fetch_leaders(lead, parallelism, fb, l2_hedge=l2_hedge)
         for name, flight in follow.items():
             flight.event.wait()
             self.counters.inc("read.singleflight_dedup")
@@ -370,7 +377,8 @@ class TieredReader:
             self._flights.pop((self.root, name), None)
         flight.event.set()
 
-    def _fetch_leaders(self, lead: list, parallelism: int, fb: FetchedBatch):
+    def _fetch_leaders(self, lead: list, parallelism: int, fb: FetchedBatch,
+                       l2_hedge: bool | None = None):
         """Push the names this call leads through the tier stages as
         batches: L1 double-check -> one batched L2 fetch -> parallel
         origin pool. Each name's flight resolves the moment its
@@ -395,6 +403,9 @@ class TieredReader:
             if pending and self.l2 is not None:
                 cs = self.m.chunk_size
                 streamed_hits: set[str] = set()
+                l2_kw = {}
+                if self._l2_hedges and l2_hedge is not None:
+                    l2_kw["hedge"] = l2_hedge
                 if self._l2_streams and fb.sink is not None:
                     # streamed mode: each chunk resolves (and feeds the
                     # sink) the moment its k-th stripe reconstructs,
@@ -405,9 +416,10 @@ class TieredReader:
                             self.l1.put(name, ct)
                         self._resolve_flight(name, unresolved.pop(name),
                                              ct, lat, fb)
-                    res = self.l2.get_chunks(pending, cs, on_ready=on_ready)
+                    res = self.l2.get_chunks(pending, cs, on_ready=on_ready,
+                                             **l2_kw)
                 elif hasattr(self.l2, "get_chunks"):
-                    res = self.l2.get_chunks(pending, cs)
+                    res = self.l2.get_chunks(pending, cs, **l2_kw)
                 else:
                     res = {n: self.l2.get_chunk(n, cs) for n in pending}
                 still = []
@@ -523,7 +535,8 @@ class TieredReader:
     def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
                      materialize: bool = True, streamed: bool = False,
                      queue_depth: int = DEFAULT_QUEUE_DEPTH,
-                     decoder: BatchDecoder | None = None) -> dict:
+                     decoder: BatchDecoder | None = None,
+                     l2_hedge: bool | None = None) -> dict:
         """Batched read: {index: plaintext} for a deduplicated chunk set
         — ``fetch_ciphertexts`` (stage F) then one batched decode
         (stage D) on the caller thread via ``decoder`` (default
@@ -545,12 +558,13 @@ class TieredReader:
         """
         if streamed and materialize:
             return self.fetch_chunks_streamed(indices, parallelism,
-                                              queue_depth, decoder)
+                                              queue_depth, decoder, l2_hedge)
         if streamed:
-            return self._prefetch_streamed(indices, parallelism, queue_depth)
+            return self._prefetch_streamed(indices, parallelism, queue_depth,
+                                           l2_hedge)
         dec = decoder if decoder is not None else self.decoder
         t0 = time.perf_counter()
-        fb = self.fetch_ciphertexts(indices, parallelism)
+        fb = self.fetch_ciphertexts(indices, parallelism, l2_hedge=l2_hedge)
         fetch_wall = time.perf_counter() - t0
         out: dict[int, bytes] = {}
         decode_wall = 0.0
@@ -593,7 +607,8 @@ class TieredReader:
         return out
 
     def _prefetch_streamed(self, indices, parallelism: int,
-                           queue_depth: int) -> dict:
+                           queue_depth: int,
+                           l2_hedge: bool | None = None) -> dict:
         """Non-materializing streamed prefetch: the streaming fetch
         producer warms every tier (per-chunk L2 stripe resolution via
         ``get_chunks(on_ready=...)``, bounded hand-off backpressure)
@@ -606,7 +621,8 @@ class TieredReader:
         def produce():
             try:
                 holder["fb"] = self.fetch_ciphertexts(indices, parallelism,
-                                                      sink=q)
+                                                      sink=q,
+                                                      l2_hedge=l2_hedge)
             except BaseException as e:
                 holder["err"] = e
                 q.poison(e)
@@ -643,7 +659,8 @@ class TieredReader:
     def fetch_chunks_streamed(self, indices,
                               parallelism: int = DEFAULT_PARALLELISM,
                               queue_depth: int = DEFAULT_QUEUE_DEPTH,
-                              decoder: BatchDecoder | None = None) -> dict:
+                              decoder: BatchDecoder | None = None,
+                              l2_hedge: bool | None = None) -> dict:
         """Streaming read: stage F runs on a producer thread pushing
         resolved ciphertexts into a ``queue_depth``-bounded queue; stage
         D (``decoder.decrypt_stream``) consumes on this thread, decoding
@@ -668,7 +685,8 @@ class TieredReader:
             ft = time.perf_counter()
             try:
                 holder["fb"] = self.fetch_ciphertexts(indices, parallelism,
-                                                      sink=q)
+                                                      sink=q,
+                                                      l2_hedge=l2_hedge)
             except BaseException as e:
                 holder["err"] = e
                 q.poison(e)
@@ -762,7 +780,8 @@ class TieredReader:
     def read_many(self, ranges, parallelism: int = DEFAULT_PARALLELISM,
                   streamed: bool = False,
                   queue_depth: int = DEFAULT_QUEUE_DEPTH,
-                  decoder: BatchDecoder | None = None) -> list:
+                  decoder: BatchDecoder | None = None,
+                  l2_hedge: bool | None = None) -> list:
         """Batched read: one `fetch_chunks` over the union chunk set of
         all (offset, length) `ranges` (overlaps deduplicated), then each
         range is assembled from the in-memory chunks. Byte-identical to
@@ -772,7 +791,8 @@ class TieredReader:
         ranges = list(ranges)
         idxs = ranges_to_chunks(ranges, self.m.chunk_size)
         chunks = self.fetch_chunks(idxs, parallelism, streamed=streamed,
-                                   queue_depth=queue_depth, decoder=decoder)
+                                   queue_depth=queue_depth, decoder=decoder,
+                                   l2_hedge=l2_hedge)
         return [self._assemble(off, ln, chunks) for off, ln in ranges]
 
 

@@ -75,8 +75,12 @@ class HashRing:
             out.append(node)
         if len(out) < count:
             if allow_repeats and out:
+                # cycle the distinct prefix of `out` itself (placement
+                # order), so every distinct node recurs evenly; indexing
+                # off any other collection risks repeating only a prefix
+                distinct = len(out)
                 while len(out) < count:
-                    out.append(out[len(out) % len(seen)])
+                    out.append(out[len(out) % distinct])
             else:
                 raise RuntimeError(f"only {len(out)} nodes for count={count}")
         return out
@@ -84,3 +88,53 @@ class HashRing:
     def record_placement(self, node: str, weight: int = 1):
         with self._load_lock:
             self.loads[node] += weight
+
+
+class HotKeyTracker:
+    """Per-key request-rate tracking for hot-chunk ("infected") salting
+    (paper §4: chunks of very popular images overwhelm their placement
+    nodes; the fix is to salt the hot key into multiple cache keys so
+    reads spread over several replica sets).
+
+    Counts are kept over a sliding window of the last ``window``
+    requests (approximated by halving every count each time ``window``
+    requests land — cheap exponential decay, no per-key timestamps), so
+    a chunk that WAS hot last epoch cools off instead of staying
+    infected forever. ``record(key)`` returns True once `key`'s
+    windowed count crosses ``threshold``; ``threshold <= 0`` disables
+    tracking entirely (zero overhead on the read path).
+    Thread-safe: the stripe wave issues placements from pool threads."""
+
+    def __init__(self, threshold: int, window: int = 4096):
+        self.threshold = threshold
+        self.window = max(1, int(window))
+        self._counts: defaultdict[str, float] = defaultdict(float)
+        self._since_decay = 0
+        self._lock = threading.Lock()
+
+    def record(self, key: str) -> bool:
+        if self.threshold <= 0:
+            return False
+        with self._lock:
+            self._counts[key] += 1
+            self._since_decay += 1
+            if self._since_decay >= self.window:
+                self._since_decay = 0
+                cold = []
+                for k in self._counts:
+                    self._counts[k] /= 2
+                    if self._counts[k] < 1.0:
+                        cold.append(k)
+                for k in cold:
+                    del self._counts[k]
+            return self._counts[key] >= self.threshold
+
+    def is_hot(self, key: str) -> bool:
+        if self.threshold <= 0:
+            return False
+        with self._lock:
+            return self._counts.get(key, 0.0) >= self.threshold
+
+    def rate(self, key: str) -> float:
+        with self._lock:
+            return self._counts.get(key, 0.0)

@@ -43,6 +43,13 @@ class LRUK:
             self._touch(key)
             return self.data[key]
 
+    def peek(self, key: str):
+        """``get`` without recording an access: a hedged re-GET of a key
+        this node already served must not double-count the key's recency
+        (one logical read, two requests)."""
+        with self._lock:
+            return self.data.get(key)
+
     def put(self, key: str, value: bytes):
         with self._lock:
             if key in self.data:

@@ -182,6 +182,36 @@ def get_backend(name: str) -> DecodeBackend:
     return _REGISTRY[resolve_backend_name(name)]
 
 
+def enable_persistent_compilation_cache(cache_dir: str) -> bool:
+    """Opt-in jax persistent compilation cache: jit artifacts land in
+    ``cache_dir`` and survive the process, so the ~4-7s per-lane-bucket
+    first-compile of the Pallas decode kernels taxes ONE process per
+    machine instead of every process's first restore. Returns True when
+    the cache was enabled (jax present and the config knob exists).
+
+    Off by default: a shared/global cache dir is a policy decision
+    (stale-artifact and disk-growth tradeoffs), so callers opt in via a
+    flag (``serve.py --jax-compile-cache``, ``decode_kernels.py
+    --compile-cache``)."""
+    try:
+        import jax
+        jax.config.update("jax_compilation_cache_dir",
+                          os.path.abspath(os.path.expanduser(cache_dir)))
+    except Exception as e:                     # jax absent / knob renamed
+        warnings.warn(f"persistent compilation cache unavailable: {e}")
+        return False
+    # best-effort tuning: cache even fast compiles (the lane buckets are
+    # many small jits); knob names vary across jax versions, so failures
+    # here must not disable the cache itself
+    for knob, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                      ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(knob, val)
+        except Exception:
+            pass
+    return True
+
+
 def _load_xla():
     from repro.kernels.aes import encrypt_many_jax
     return encrypt_many_jax, None

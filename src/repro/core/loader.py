@@ -115,7 +115,12 @@ class ImageReader:
     ``batched=/streamed=/parallelism=`` keywords into ``ReadPolicy``.
     Kept so pre-redesign call sites and the byte-identity oracles pass
     unmodified; new code should construct an ``ImageService`` and use
-    ``service.open(...)`` directly."""
+    ``service.open(...)`` directly.
+
+    The L2 resilience knobs flow through unchanged: pass a
+    ``DistributedCache`` built with fault plans / salting / hedging as
+    `l2`, and per-read hedging via ``policy=ReadPolicy(l2_hedge=...)``
+    (an explicit `policy` wins over the legacy keywords)."""
 
     def __init__(self, manifest_blob: bytes, tenant_key: bytes, store,
                  l1=None, l2=None, concurrency=None, root: str | None = None,

@@ -110,6 +110,10 @@ class ReadPolicy:
     ``eager_min_bytes`` — minimum partial-tile bytes before an eager
     flush may fire (``None`` = service default): holds tile efficiency
     at scale by refusing to shred slivers into the pool.
+    ``l2_hedge`` — hedged stripe GETs in the L2 for this read.
+    Tri-state like ``eager_flush``: ``None`` inherits the cache's
+    ``hedge_quantile`` default, ``True``/``False`` force it per read
+    (forwarded only when the L2 supports hedging).
     """
 
     mode: str = "streamed"
@@ -119,6 +123,7 @@ class ReadPolicy:
     queue_depth: int = DEFAULT_QUEUE_DEPTH
     eager_flush: bool | None = None
     eager_min_bytes: int | None = None
+    l2_hedge: bool | None = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -175,6 +180,11 @@ class ServiceConfig:
     session_ttl_s: float | None = None  # None = no idle expiry
     manifest_cap: int = 128             # LRU manifest bound (0 = unbounded)
     origin_delay_s: float = 0.0
+    # L2 resilience knobs (only used when the service builds its own L2)
+    l2_stripe_deadline_s: float | None = None   # None = cache default
+    l2_hedge_quantile: float | None = None      # None = hedging off
+    l2_infection_threshold: int = 0             # 0 = hot-key salting off
+    l2_salt_count: int = 3                      # placement keys when salted
     root: str | None = None             # default root for open()
     default_policy: ReadPolicy = field(default_factory=ReadPolicy)
 
@@ -214,8 +224,13 @@ class ImageService:
                 kw["mem_bytes"] = cfg.l2_mem_bytes
             if cfg.l2_flash_bytes is not None:
                 kw["flash_bytes"] = cfg.l2_flash_bytes
-            self.l2 = DistributedCache(num_nodes=cfg.l2_nodes,
-                                       seed=cfg.l2_seed, **kw)
+            if cfg.l2_stripe_deadline_s is not None:
+                kw["stripe_deadline_s"] = cfg.l2_stripe_deadline_s
+            self.l2 = DistributedCache(
+                num_nodes=cfg.l2_nodes, seed=cfg.l2_seed,
+                hedge_quantile=cfg.l2_hedge_quantile,
+                infection_threshold=cfg.l2_infection_threshold,
+                salt_count=cfg.l2_salt_count, **kw)
         else:
             self.l2 = None
         if fetch_limiter is not None:
@@ -503,7 +518,8 @@ class ImageHandle:
         else:
             bufs = iter(self.reader.read_many(
                 all_ranges, p.parallelism, streamed=p.streamed,
-                queue_depth=p.queue_depth, decoder=dec))
+                queue_depth=p.queue_depth, decoder=dec,
+                l2_hedge=p.l2_hedge))
         out = {}
         for name, ranges, shape, dt in plan:
             raw = b"".join(next(bufs) for _ in ranges)
@@ -537,7 +553,8 @@ class ImageHandle:
         p, _ = self._resolve(policy)
         self.reader.fetch_chunks(chunk_indices, p.parallelism,
                                  materialize=False, streamed=p.streamed,
-                                 queue_depth=p.queue_depth)
+                                 queue_depth=p.queue_depth,
+                                 l2_hedge=p.l2_hedge)
 
 
 def single_image_service(store, *, l1=None, l2=None, fetch_limiter=None,

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import threading
-from collections import defaultdict
+from collections import defaultdict, deque
 
 import numpy as np
 
@@ -89,6 +89,39 @@ class ScopedCounters:
 
 
 COUNTERS = Counters()
+
+
+class QuantileWindow:
+    """Sliding-window quantile over the most recent samples.
+
+    The hedged-GET deadline is "past the p-th quantile of *recent*
+    stripe latencies" (tail-cutting, The Tail at Scale style): a
+    full-history recorder would let an hour-old latency regime set
+    today's hedge threshold, so the L2 keeps a small ring buffer and
+    answers quantiles from it. ``quantile`` returns NaN until
+    ``min_samples`` have landed — hedging stays off while the estimate
+    would be noise. Thread-safe (stripe pool workers record
+    concurrently)."""
+
+    def __init__(self, maxlen: int = 512, min_samples: int = 32):
+        self._dq: deque = deque(maxlen=maxlen)
+        self.min_samples = min_samples
+        self._lock = threading.Lock()
+
+    def record(self, value: float):
+        with self._lock:
+            self._dq.append(value)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._dq)
+
+    def quantile(self, q: float) -> float:
+        with self._lock:
+            if len(self._dq) < self.min_samples:
+                return float("nan")
+            a = np.fromiter(self._dq, dtype=float)
+        return float(np.quantile(a, q))
 
 
 class LatencyRecorder:

@@ -32,6 +32,27 @@ def main():
                     help="shared worker-local L1 cache size (0 = no L1)")
     ap.add_argument("--l2-nodes", type=int, default=6,
                     help="erasure-coded L2 cluster size (0 = no L2)")
+    ap.add_argument("--l2-stripe-deadline-ms", type=float, default=None,
+                    help="per-stripe GET deadline in ms: a stripe node "
+                         "that never answers (blackholed) costs this "
+                         "timeout instead of a hang (default: the "
+                         "cache's built-in deadline)")
+    ap.add_argument("--l2-hedge-quantile", type=float, default=None,
+                    help="hedged stripe GETs: race one extra request "
+                         "against any stripe slower than this quantile "
+                         "of recent stripe latencies, e.g. 0.95 "
+                         "(default: hedging off)")
+    ap.add_argument("--l2-infection-threshold", type=int, default=0,
+                    help="hot-key salting: windowed per-chunk request "
+                         "count past which a chunk is salted into "
+                         "multiple placement keys (0 = salting off)")
+    ap.add_argument("--l2-salt-count", type=int, default=3,
+                    help="placement keys an infected chunk is salted "
+                         "into (reads round-robin, writes fan out)")
+    ap.add_argument("--jax-compile-cache", default=None, metavar="DIR",
+                    help="enable jax's persistent compilation cache in "
+                         "DIR so jit'd decode kernels compile once per "
+                         "machine, not once per process (opt-in)")
     ap.add_argument("--max-coldstarts", type=int, default=4,
                     help="admission control: concurrent cold starts this "
                          "replica accepts before REJECTING (RejectingLimiter, "
@@ -66,6 +87,12 @@ def main():
                          "partial tile whenever the streamed consumer "
                          "would otherwise block")
     args = ap.parse_args()
+
+    if args.jax_compile_cache:
+        from repro.core.decode import enable_persistent_compilation_cache
+        if enable_persistent_compilation_cache(args.jax_compile_cache):
+            print(f"jax persistent compilation cache: "
+                  f"{args.jax_compile_cache}")
 
     import jax
 
@@ -107,6 +134,12 @@ def main():
     svc_cfg = ServiceConfig(
         l1_bytes=args.l1_bytes,
         l2_nodes=args.l2_nodes,
+        l2_stripe_deadline_s=(args.l2_stripe_deadline_ms / 1e3
+                              if args.l2_stripe_deadline_ms is not None
+                              else None),
+        l2_hedge_quantile=args.l2_hedge_quantile,
+        l2_infection_threshold=args.l2_infection_threshold,
+        l2_salt_count=args.l2_salt_count,
         max_coldstarts=args.max_coldstarts,
         fetch_concurrency=args.fetch_concurrency,
         decode_backend=args.decode_backend,

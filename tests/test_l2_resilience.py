@@ -1,0 +1,299 @@
+"""Resilient-L2 behavior: fault plans through the latency recorders,
+per-stripe deadlines, mid-flight fault switches, hedged GETs, hot-key
+salting, the ring repeat-fill wraparound, and the invalidate-vs-stream
+race."""
+import math
+import threading
+
+import numpy as np
+
+from repro.core.cache.distributed import (
+    CacheNode,
+    DistributedCache,
+    FaultPlan,
+    LatencyModel,
+)
+from repro.core.cache.hashring import HashRing, HotKeyTracker
+from repro.core.telemetry import COUNTERS, QuantileWindow
+
+
+def _chunk(seed=0, size=65536) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+
+
+class TestFaultPlans:
+    def test_crashed_node_records_through_recorder(self):
+        """Satellite fix: failure responses flow through get_lat/put_lat
+        via the latency model, not a hardcoded (0.1, None)."""
+        node = CacheNode("n", 1 << 20, 1 << 20, np.random.default_rng(0))
+        node.put("k", b"v")
+        n_get = len(node.get_lat.samples)
+        n_put = len(node.put_lat.samples)
+        node.set_fault(FaultPlan.crashed())
+        lat, v = node.get("k")
+        plat = node.put("k2", b"w")
+        assert v is None
+        assert lat != 0.1 and 0 < lat < 0.05    # a net RTT, not a constant
+        assert plat != 0.1 and 0 < plat < 0.05
+        assert len(node.get_lat.samples) == n_get + 1
+        assert len(node.put_lat.samples) == n_put + 1
+
+    def test_blackholed_node_never_responds(self):
+        node = CacheNode("n", 1 << 20, 1 << 20, np.random.default_rng(0))
+        node.put("k", b"v")
+        node.set_fault(FaultPlan.blackholed())
+        lat, v = node.get("k")
+        assert math.isinf(lat) and v is None
+        assert math.isinf(node.put("k2", b"w"))
+
+    def test_slow_plan_degrades_latency(self):
+        rng = np.random.default_rng(1)
+        node = CacheNode("n", 1 << 20, 1 << 20, rng)
+        node.put("k", b"v")
+        healthy = [node.get("k")[0] for _ in range(200)]
+        node.set_fault(FaultPlan.slow(mult=8.0, stall_p=0.0))
+        slow = [node.get("k")[0] for _ in range(200)]
+        assert np.median(slow) > np.median(healthy)
+
+    def test_failed_flag_back_compat(self):
+        node = CacheNode("n", 1 << 20, 1 << 20, np.random.default_rng(0))
+        assert not node.failed
+        node.failed = True
+        assert node.failed and node.fault.kind == FaultPlan.CRASHED
+        node.failed = False
+        assert node.fault.kind == FaultPlan.HEALTHY
+
+    def test_blackhole_costs_deadline_not_hang(self):
+        """A blackholed node's inf latency becomes a bounded per-stripe
+        timeout at the client; the chunk still reconstructs from the
+        other k stripes."""
+        l2 = DistributedCache(num_nodes=8, seed=2, stripe_deadline_s=0.01)
+        data = _chunk(2)
+        l2.put_chunk("bh", data)
+        victim = l2.ring.lookup("bh", count=5)[1]
+        before = COUNTERS.get("l2.stripe_timeouts")
+        l2.set_fault(victim, FaultPlan.blackholed())
+        lat, got = l2.get_chunk("bh", len(data))
+        assert got == data
+        assert math.isfinite(lat) and lat <= 5 * 0.01
+        assert COUNTERS.get("l2.stripe_timeouts") > before
+
+    def test_mid_flight_fault_switch(self):
+        """set_fault mid-stream: reads before the switch succeed, reads
+        after see the fault — and heal restores service."""
+        l2 = DistributedCache(num_nodes=8, seed=3)
+        data = _chunk(3, 8192)
+        for i in range(4):
+            l2.put_chunk(f"m{i}", data)
+        assert l2.get_chunk("m0", len(data))[1] == data
+        for name in list(l2.nodes)[:2]:
+            l2.set_fault(name, FaultPlan.crashed())
+        got = [l2.get_chunk(f"m{i}", len(data))[1] for i in range(4)]
+        assert all(g is None or g == data for g in got)
+        for name in list(l2.nodes):
+            l2.set_fault(name, FaultPlan.healthy())
+        # repopulate (two-failure chunks may have missed, not corrupted)
+        for i in range(4):
+            l2.put_chunk(f"m{i}", data)
+        assert all(l2.get_chunk(f"m{i}", len(data))[1] == data
+                   for i in range(4))
+
+
+class TestHedging:
+    def _warm(self, l2, data, n=30):
+        for i in range(n):
+            l2.put_chunk(f"w{i}", data)
+        for i in range(n):
+            l2.get_chunk(f"w{i}", len(data))
+
+    def test_hedge_fires_and_counts(self):
+        l2 = DistributedCache(num_nodes=8, seed=4, hedge_quantile=0.5)
+        data = _chunk(4, 8192)
+        self._warm(l2, data)          # fill the latency window
+        before = COUNTERS.get("l2.hedges")
+        for i in range(30):
+            assert l2.get_chunk(f"w{i}", len(data))[1] == data
+        assert COUNTERS.get("l2.hedges") > before   # q=0.5 must trigger
+
+    def test_hedging_off_by_default(self):
+        l2 = DistributedCache(num_nodes=8, seed=5)
+        data = _chunk(5, 8192)
+        self._warm(l2, data)
+        before = COUNTERS.get("l2.hedges")
+        for i in range(30):
+            l2.get_chunk(f"w{i}", len(data))
+        assert COUNTERS.get("l2.hedges") == before
+
+    def test_per_call_hedge_override(self):
+        l2 = DistributedCache(num_nodes=8, seed=6, hedge_quantile=0.5)
+        data = _chunk(6, 8192)
+        self._warm(l2, data)
+        before = COUNTERS.get("l2.hedges")
+        l2.get_chunks([f"w{i}" for i in range(30)], len(data), hedge=False)
+        assert COUNTERS.get("l2.hedges") == before    # forced off
+        l2.get_chunks([f"w{i}" for i in range(30)], len(data), hedge=True)
+        assert COUNTERS.get("l2.hedges") > before     # forced on
+
+    def test_hedging_cuts_stall_tail(self):
+        """Per-request stalls on slow nodes: racing one fresh draw past
+        the deadline quantile cuts the p99 (Tail-at-Scale)."""
+        l2 = DistributedCache(num_nodes=8, seed=7)
+        data = _chunk(7, 8192)
+        self._warm(l2, data, n=40)
+        for name in sorted(l2.nodes)[:2]:
+            l2.set_fault(name, FaultPlan.slow(mult=3.0, stall_p=0.3,
+                                              stall_mult=25.0))
+        l2.hedge_quantile = 0.9
+        names = [f"w{i}" for i in range(40)]
+        unhedged, hedged = [], []
+        for _ in range(5):
+            res = l2.get_chunks(names, len(data), hedge=False)
+            unhedged += [lat for lat, v in res.values() if v is not None]
+            res = l2.get_chunks(names, len(data), hedge=True)
+            hedged += [lat for lat, v in res.values() if v is not None]
+        assert np.percentile(hedged, 99) < np.percentile(unhedged, 99)
+
+    def test_quantile_window_warmup(self):
+        w = QuantileWindow(maxlen=64, min_samples=8)
+        for i in range(7):
+            w.record(float(i))
+        assert math.isnan(w.quantile(0.9))      # below min_samples
+        w.record(7.0)
+        assert 0.0 <= w.quantile(0.5) <= 7.0
+
+
+class TestHotKeySalting:
+    def _hot_l2(self, threshold=8, salt_count=3, seed=8):
+        return DistributedCache(num_nodes=10, seed=seed,
+                                infection_threshold=threshold,
+                                salt_count=salt_count)
+
+    def test_infection_salts_and_reads_spread(self):
+        l2 = self._hot_l2()
+        data = _chunk(8, 8192)
+        l2.put_chunk("hot", data)
+        before_salted = COUNTERS.get("l2.salted_chunks")
+        for _ in range(40):           # cross the threshold, then re-read
+            assert l2.get_chunk("hot", len(data))[1] == data
+        assert COUNTERS.get("l2.salted_chunks") > before_salted
+        assert l2._salts.get("hot") == 3
+        # salted reads round-robin over placements: the salt keys place
+        # on different ring segments, so served GETs spread wider than
+        # one stripe set
+        assert COUNTERS.get("l2.salted_reads") > 0
+        base = set(l2.ring.lookup("hot", count=5))
+        salted = set(l2.ring.lookup("hot#s1", count=5)) | \
+            set(l2.ring.lookup("hot#s2", count=5))
+        assert salted - base          # genuinely new nodes in play
+
+    def test_write_fans_out_to_salts(self):
+        l2 = self._hot_l2()
+        data = _chunk(9, 8192)
+        l2.put_chunk("hot", data)
+        for _ in range(20):
+            l2.get_chunk("hot", len(data))
+        assert "hot" in l2._salts
+        data2 = _chunk(10, 8192)
+        l2.put_chunk("hot", data2)    # write fan-out to every salt
+        for _ in range(12):           # all round-robin placements agree
+            assert l2.get_chunk("hot", len(data2))[1] == data2
+
+    def test_invalidate_drops_all_salts(self):
+        l2 = self._hot_l2()
+        data = _chunk(11, 8192)
+        l2.put_chunk("hot", data)
+        for _ in range(20):
+            l2.get_chunk("hot", len(data))
+        assert "hot" in l2._salts
+        l2.invalidate("hot")
+        assert "hot" not in l2._salts
+        for _ in range(6):            # every placement is gone
+            assert l2.get_chunk("hot", len(data))[1] is None
+
+    def test_cold_keys_never_salt(self):
+        l2 = self._hot_l2(threshold=1000)
+        data = _chunk(12, 8192)
+        for i in range(20):
+            l2.put_chunk(f"c{i}", data)
+            l2.get_chunk(f"c{i}", len(data))
+        assert not l2._salts
+
+    def test_tracker_decay_cools_old_keys(self):
+        t = HotKeyTracker(threshold=4, window=16)
+        for _ in range(4):
+            assert not t.is_hot("other") and t.record("k") in (True, False)
+        assert t.is_hot("k")
+        for i in range(64):           # decay epochs without touching k
+            t.record(f"noise{i % 8}")
+        assert not t.is_hot("k")
+
+    def test_threshold_zero_disables(self):
+        t = HotKeyTracker(threshold=0)
+        assert not t.record("k") and not t.is_hot("k")
+
+
+class TestRingRepeatFill:
+    def test_small_ring_cycles_all_distinct_nodes(self):
+        """Satellite regression: count > len(nodes) must cycle EVERY
+        distinct node evenly, not repeat a prefix."""
+        ring = HashRing(["a", "b", "c"], vnodes=16)
+        out = ring.lookup("some-key", count=9)
+        assert len(out) == 9
+        assert set(out) == {"a", "b", "c"}
+        counts = {n: out.count(n) for n in set(out)}
+        assert set(counts.values()) == {3}    # even 3x cycle
+        assert out[3:6] == out[:3] and out[6:9] == out[:3]
+
+    def test_single_node_repeat(self):
+        ring = HashRing(["only"], vnodes=8)
+        assert ring.lookup("k", count=5) == ["only"] * 5
+
+    def test_no_repeats_raises(self):
+        ring = HashRing(["a", "b"], vnodes=8)
+        try:
+            ring.lookup("k", count=3, allow_repeats=False)
+            raise AssertionError("expected RuntimeError")
+        except RuntimeError:
+            pass
+
+
+class TestInvalidateVsStreamRace:
+    def test_concurrent_invalidate_streaming_get(self):
+        """Satellite: a chunk invalidated mid-stripe-wave must resolve
+        to a miss or the valid bytes — never a partial reconstruction
+        (wrong bytes)."""
+        l2 = DistributedCache(num_nodes=8, seed=13)
+        datas = {f"r{i}": _chunk(100 + i, 8192) for i in range(12)}
+        stop = threading.Event()
+        errors: list = []
+
+        def invalidator():
+            rng = np.random.default_rng(99)
+            while not stop.is_set():
+                name = f"r{int(rng.integers(0, len(datas)))}"
+                l2.invalidate(name)
+                l2.put_chunk(name, datas[name])
+
+        th = threading.Thread(target=invalidator, daemon=True)
+        for name, data in datas.items():
+            l2.put_chunk(name, data)
+        th.start()
+        try:
+            for _ in range(15):
+                got: dict = {}
+
+                def on_ready(name, lat, data):
+                    got[name] = data
+
+                res = l2.get_chunks(list(datas), 8192, on_ready=on_ready)
+                for name, (lat, v) in res.items():
+                    if v is not None and v != datas[name]:
+                        errors.append(f"partial reconstruction on {name}")
+                for name, v in got.items():
+                    if v != datas[name]:
+                        errors.append(f"streamed bad bytes on {name}")
+        finally:
+            stop.set()
+            th.join()
+        assert not errors, errors[:3]

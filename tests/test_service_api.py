@@ -566,9 +566,9 @@ def test_service_close_drains_and_rejects_new_opens(tmp_path):
     images = _make_images(store, gc.active, 2)
     svc = ImageService(store, ServiceConfig(
         l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
-        max_coldstarts=0))
-    _, blob = images[0]
-    h = svc.open(blob, b"C" * 32)
+        max_coldstarts=0, decode_threads=2))   # pin >1: the pool only
+    _, blob = images[0]                        # spins when threads > 1,
+    h = svc.open(blob, b"C" * 32)              # not on 1-CPU hosts
     h.restore_tree()                      # spin the decode pool up
     dec = h.reader.decoder
     assert dec._pool._pool is not None
