@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.crypto import aes
 from repro.core.decode import get_backend, registered_backends
+from repro.kernels.aes import bitslice
 
 BENCH_JSON = os.environ.get("BENCH_E2E_JSON", "BENCH_e2e.json")
 FULL_SHAPE = (64, 4096)        # one default 256 KiB decode tile
@@ -153,6 +154,112 @@ def measure_ratios(name: str, nchunks: int, chunk_bytes: int,
     }
 
 
+def measure_fused(nchunks: int, chunk_bytes: int, repeats: int = 5,
+                  seed: int = 2) -> dict | None:
+    """The fused verify+decrypt pass vs the bitsliced TWO-PASS decode
+    (sha verify + keystream decrypt as separate kernel launches) and vs
+    the serial per-chunk oracle, interleaved-median like
+    ``measure_ratios``. ``fused_x_twopass`` is the acceptance metric for
+    the single-walk kernel: digests AND plaintexts from one pass must
+    beat verify-then-decrypt as two. Returns None when no fused backend
+    is registered."""
+    be = get_backend("bitsliced-fused")
+    fused = be.fused
+    if fused is None:
+        return None
+    keys, datas = _mk_batch(nchunks, chunk_bytes, seed)
+    sizes = [len(d) for d in datas]
+    total = float(sum(sizes))
+    two = get_backend("bitsliced")
+
+    def fused_fn():
+        return fused(datas, keys)
+
+    def twopass_fn():
+        digs = two.sha_many(datas)
+        return digs, aes.ctr_decrypt_many(datas, keys,
+                                          encrypt_many=two.encrypt_many)
+
+    def serial_fn():
+        return ([hashlib.sha256(d).digest() for d in datas],
+                [aes.ctr_decrypt(d, k) for d, k in zip(datas, keys)])
+
+    # byte-identity against the serial oracle (and jit warm-up)
+    want_d, want_p = serial_fn()
+    got_d, got_p = fused_fn()
+    assert got_d == want_d, "fused: digests diverged from hashlib"
+    assert got_p == want_p, "fused: plaintexts diverged from serial CTR"
+    td, tp = twopass_fn()
+    assert td == want_d and tp == want_p, \
+        "bitsliced two-pass diverged from serial oracle"
+    f_t, t_t, s_t = [], [], []
+    for _ in range(repeats):
+        f_t.append(_timed(fused_fn))
+        t_t.append(_timed(twopass_fn))
+        s_t.append(_timed(serial_fn))
+    f_s = float(np.median(f_t))
+    t_s = float(np.median(t_t))
+    s_s = float(np.median(s_t))
+    return {
+        "chunks": nchunks,
+        "chunk_bytes": chunk_bytes,
+        "fused_s": f_s,
+        "twopass_s": t_s,
+        "serial_s": s_s,
+        "fused_gbps": total / f_s / 1e9,
+        "fused_x_twopass": t_s / f_s,
+        "fused_x_serial": s_s / f_s,
+    }
+
+
+def measure_pack(nchunks: int, chunk_bytes: int, repeats: int = 5,
+                 seed: int = 3) -> dict:
+    """Host-side cost of plane packing, before vs after the on-device
+    move. ``host_legacy_s`` replays what the bitsliced path used to do
+    on the CPU per tile: transpose every AES block into 8x16 bit planes
+    plus a per-BLOCK ``np.repeat`` + transposition of the round-key
+    schedules. ``host_prep_s`` is the host work that remains on today's
+    hot path — stack the per-CHUNK schedules, build the block→chunk
+    index vector, pad to lane width — everything else now runs inside
+    the jit'd program. The ratio is the offload win recorded into
+    BENCH_e2e.json (acceptance: host pack off the hot path, prep
+    near-zero)."""
+    rng = np.random.default_rng(seed)
+    bpc = (chunk_bytes + 15) // 16
+    blocks = rng.integers(0, 256, (nchunks * bpc, 16), dtype=np.uint8)
+    rk_list = [aes.expand_key(
+        rng.integers(0, 256, 32, dtype=np.uint8).tobytes())
+        for _ in range(nchunks)]
+    counts = np.full(nchunks, bpc, dtype=np.int64)
+
+    def legacy():
+        per_block = np.repeat(np.stack(rk_list), counts, axis=0)
+        return (bitslice.pack_planes(blocks),
+                bitslice.pack_round_keys(per_block))
+
+    def prep():
+        rks = np.stack(rk_list)
+        idx = np.repeat(np.arange(nchunks, dtype=np.int32), counts)
+        n = len(blocks)
+        pad = -n % 32
+        b = blocks if not pad else np.concatenate(
+            [blocks, np.repeat(blocks[-1:], pad, axis=0)])
+        i = idx if not pad else np.concatenate(
+            [idx, np.full(pad, idx[-1], dtype=np.int32)])
+        return rks, b, i
+
+    legacy(), prep()
+    leg_s = float(np.median([_timed(legacy) for _ in range(repeats)]))
+    prep_s = float(np.median([_timed(prep) for _ in range(repeats)]))
+    return {
+        "chunks": nchunks,
+        "chunk_bytes": chunk_bytes,
+        "host_legacy_s": leg_s,
+        "host_prep_s": prep_s,
+        "host_offload_x": leg_s / max(prep_s, 1e-9),
+    }
+
+
 def _backend_names() -> list:
     return sorted(registered_backends()) + ["serial"]
 
@@ -199,6 +306,33 @@ def run() -> list:
             name=f"decode_kernels.{name}.verify_gbps",
             value=full["verify_gbps"],
             derived=f"batched SHA-256 verify, same batch"))
+    fused = measure_fused(*FULL_SHAPE)
+    if fused is not None:
+        update.setdefault("bitsliced-fused", {})["fused"] = fused
+        smoke_fused = measure_fused(*SMOKE_SHAPE)
+        if smoke_fused is not None:
+            update["bitsliced-fused"]["smoke_fused"] = smoke_fused
+        rows.append(dict(
+            name="decode_kernels.bitsliced-fused.fused_gbps",
+            value=fused["fused_gbps"],
+            derived="ONE pass: digests + plaintexts together"))
+        rows.append(dict(
+            name="decode_kernels.bitsliced-fused.fused_x_twopass",
+            value=fused["fused_x_twopass"],
+            derived="fused pass vs bitsliced verify-then-decrypt as two "
+                    "launches, same batch same machine (target >= 1.5x)"))
+    pack = measure_pack(*FULL_SHAPE)
+    update["pack"] = pack
+    rows.append(dict(
+        name="decode_kernels.pack.host_legacy_s",
+        value=pack["host_legacy_s"],
+        derived="host bit-plane + per-block round-key pack the bitsliced "
+                "path used to pay per tile (now on-device)"))
+    rows.append(dict(
+        name="decode_kernels.pack.host_prep_s",
+        value=pack["host_prep_s"],
+        derived="host work remaining on today's hot path (stack + index "
+                "+ pad); ratio = pack.host_offload_x"))
     merge_bench_json(update, section="decode_kernels")
     return rows
 
@@ -249,6 +383,31 @@ def smoke() -> None:
                       f"GB/s ({got['keystream_x_serial']:.2f}x serial), "
                       f"verify {got['verify_gbps']:.4f} GB/s"
                       f"{note}")
+    # the fused single-walk pass: same ratio-anchored gate, against its
+    # recorded fused_x_serial baseline (identity asserted inside)
+    try:
+        got_f = measure_fused(*SMOKE_SHAPE)
+    except AssertionError as e:
+        got_f, _ = None, failures.append(str(e))
+    if got_f is not None:
+        base_f = baselines.get("bitsliced-fused", {}).get("smoke_fused")
+        note = ""
+        if base_f and "fused_x_serial" in base_f:
+            if min(got_f["fused_s"], got_f["serial_s"], base_f["fused_s"],
+                   base_f["serial_s"]) >= MIN_GATE_SECONDS and \
+                    got_f["fused_x_serial"] < \
+                    base_f["fused_x_serial"] * REGRESSION_FRACTION:
+                failures.append(
+                    f"bitsliced-fused: fused pass regressed to "
+                    f"{got_f['fused_x_serial']:.3f}x the serial oracle "
+                    f"(< {REGRESSION_FRACTION:.0%} of the recorded "
+                    f"{base_f['fused_x_serial']:.3f}x)")
+        else:
+            note = " (no recorded baseline; identity only)"
+        report.append(
+            f"  bitsliced-fused[one-pass]: {got_f['fused_gbps']:.4f} GB/s "
+            f"({got_f['fused_x_twopass']:.2f}x two-pass, "
+            f"{got_f['fused_x_serial']:.2f}x serial){note}")
     if failures:
         print("DECODE KERNEL SMOKE REGRESSION:")
         for f in failures:

@@ -14,9 +14,29 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Persistent jax compilation cache for the BENCHMARK SMOKE processes:
+# the Pallas/jit decode kernels cost ~4-7s per lane bucket on first
+# compile, and without a cache every smoke process in this script pays
+# it again. A tmpdir cache survives across runs on the same machine and
+# is harmless to delete. Honor a caller-provided JAX_COMPILATION_CACHE_DIR.
+#
+# Deliberately NOT exported to the pytest process: on jax 0.4.37 CPU an
+# executable reloaded from the persistent cache is not bit-identical to
+# a freshly compiled one for float programs (different fusion decisions
+# survive serialization), which breaks the bitwise-resume determinism
+# test in test_checkpoint_elastic.py. The decode smokes are safe — their
+# kernels are pure integer ops and every number is byte-identity-gated
+# against the serial oracle anyway.
+: "${JAX_COMPILATION_CACHE_DIR:=${TMPDIR:-/tmp}/repro-jax-cache}"
+JAX_CACHE_ENV=(
+    "JAX_COMPILATION_CACHE_DIR=$JAX_COMPILATION_CACHE_DIR"
+    "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0"
+    "JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES=-1"
+)
 if [ "$#" -eq 0 ]; then
     python -m pytest -x -q tests
-    if ! PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
         python benchmarks/e2e_read_latency.py --smoke; then
         echo "FAIL: benchmark smoke regression (see SMOKE REGRESSION above)" >&2
         exit 1
@@ -24,7 +44,8 @@ if [ "$#" -eq 0 ]; then
     # decode-kernel gate: every registered backend byte-identical to the
     # serial oracle and holding at least half its recorded throughput
     # ratio vs the same-run serial oracle (see decode_kernels.py)
-    if ! PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
         python benchmarks/decode_kernels.py --smoke; then
         echo "FAIL: decode kernel smoke regression (see above)" >&2
         exit 1
@@ -32,7 +53,8 @@ if [ "$#" -eq 0 ]; then
     # fault-injection gate: a stripe node crashed/blackholed MID-streamed-
     # restore must not change restored bytes, and one crashed node must
     # not drop the L2 hit rate below the healthy-run ratio
-    if ! PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
         python benchmarks/fault_injection.py --smoke; then
         echo "FAIL: fault-injection smoke regression (see above)" >&2
         exit 1

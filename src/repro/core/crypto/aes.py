@@ -226,9 +226,18 @@ def ctr_keystream_many(keys: list, nbytes: list, ivs: list | None = None,
         if rk is None:
             rk = expanded[k] = expand_key(k)
         per_key.append(rk)
-    rks = np.repeat(np.stack(per_key), nblocks, axis=0)
-    fn = encrypt_many or encrypt_blocks
-    ks = np.asarray(fn(ctr, rks)).reshape(total * 16)
+    if encrypt_many is not None and getattr(encrypt_many, "per_chunk_rks",
+                                            False):
+        # run-length protocol: ship ONE schedule per chunk plus block
+        # counts; the backend broadcasts on device (no host np.repeat
+        # of 60-word schedules per 16-byte block)
+        ks = np.asarray(encrypt_many(
+            ctr, np.stack(per_key),
+            counts=np.asarray(nblocks, np.int64))).reshape(total * 16)
+    else:
+        rks = np.repeat(np.stack(per_key), nblocks, axis=0)
+        fn = encrypt_many or encrypt_blocks
+        ks = np.asarray(fn(ctr, rks)).reshape(total * 16)
     out = []
     off = 0
     for nb, want in zip(nblocks, nbytes):

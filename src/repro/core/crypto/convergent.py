@@ -55,7 +55,7 @@ def decrypt_chunk(ciphertext: bytes, key: bytes, expect_sha256: bytes) -> bytes:
 
 def decrypt_chunks(ciphertexts: list, keys: list, expect_sha256s: list, *,
                    sha_backend: str = "hashlib", encrypt_many=None,
-                   sha_many=None) -> list:
+                   sha_many=None, fused=None) -> list:
     """Batched verify-then-decrypt of N chunks.
 
     Verification is one batched SHA pass over all ciphertexts
@@ -66,11 +66,27 @@ def decrypt_chunks(ciphertexts: list, keys: list, expect_sha256s: list, *,
     (``aes.ctr_keystream_many``; ``encrypt_many`` plugs in a
     ``repro.kernels.aes`` variant — the XLA T-table pass or the
     bitsliced Pallas kernel; the decode-backend registry in
-    ``core.decode`` pairs the two hooks). Integrity stays per-chunk: a
-    single tampered ciphertext raises ``IntegrityError`` naming every
-    offending batch position — no plaintext of a bad chunk is ever
-    produced, and verification completes for the whole batch before any
-    keystream is generated (verify-THEN-decrypt, batch-wide)."""
+    ``core.decode`` pairs the two hooks).
+
+    A ``fused`` callable (``repro.kernels.fused.fused_verify_decrypt``)
+    replaces BOTH passes with one: (ciphertexts, keys) -> (digests,
+    plaintexts) from a single tiled walk over the bytes. The integrity
+    contract is preserved — digests are compared before any plaintext
+    leaves this function, and a tampered chunk raises the same
+    ``IntegrityError`` naming every offending batch position — though
+    the fused pass relaxes the internal ordering from "verify the whole
+    batch, then decrypt" to "verify and decrypt together, release
+    nothing on mismatch" (no bad chunk's plaintext is ever returned
+    either way)."""
+    if fused is not None:
+        digests, plains = fused(list(ciphertexts), list(keys))
+        bad = [i for i, (got, want)
+               in enumerate(zip(digests, expect_sha256s)) if got != want]
+        if bad:
+            raise IntegrityError(
+                f"chunk ciphertext hash mismatch at batch positions {bad}",
+                bad)
+        return plains
     if sha_many is not None:
         digests = sha_many(list(ciphertexts))
     else:

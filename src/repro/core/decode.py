@@ -70,14 +70,27 @@ instead of threading ``encrypt_many``/``sha_backend`` hooks separately:
   (Boyar–Peralta S-box circuit, ``kernels/aes/bitslice_pallas``) +
   lockstep SHA-256 verify (``kernels/sha256``). The TPU VPU lowering;
   off-TPU both kernels run under the Pallas interpreter.
-* ``"auto"``: probe the jax platform — ``bitsliced`` on TPU, ``xla`` on
-  GPU, ``python`` on CPU.
+* ``"bitsliced-fused"`` (alias ``"fused"``): ONE tiled pass
+  (``kernels/fused``) producing digests AND plaintext from a single
+  walk over each ciphertext — the lockstep SHA lanes and the bitsliced
+  keystream XOR share the tile, halving memory traffic versus the
+  ``sha_many``-then-``encrypt_many`` pair, with per-CHUNK round keys
+  broadcast inside the kernel instead of repeated per block.
+* ``"auto"``: probe the jax platform — ``bitsliced-fused`` on TPU,
+  ``xla`` on GPU, ``python`` on CPU.
 * ``"serial"``: the per-chunk ``decrypt_chunk`` oracle — PR 1's caller-
   thread behavior, kept for byte-identity tests and benchmarks (not a
   registry object; it bypasses the batched pass entirely).
 
+Tile sizing: ``BatchDecoder(max_batch_bytes="auto")`` (the
+``ServiceConfig`` default) asks ``autotune_tile_bytes`` for the
+backend's best tile — a small timed sweep at first use, cached per
+process; an explicit ``ServiceConfig``/``ReadPolicy`` integer override
+always wins, and ``REPRO_NO_AUTOTUNE=1`` disables the sweep entirely.
+
 ``benchmarks/decode_kernels.py`` records every registered backend's
-keystream and verify GB/s into BENCH_e2e.json and gates regressions.
+keystream and verify GB/s (and the fused combined pass) into
+BENCH_e2e.json and gates regressions.
 """
 from __future__ import annotations
 
@@ -103,10 +116,14 @@ class DecodeBackend:
     """One named decode kernel pair: the batched AES block pass + the
     batched SHA digest pass, with the tile/threading shape they want.
 
-    ``loader`` materializes the two hooks lazily (kernel imports pull
-    jax; constructing the default python backend must not), returning
-    ``(encrypt_many, sha_many)`` where ``None`` selects the numpy
-    T-table core / the ``sha_backend`` string path respectively.
+    ``loader`` materializes the hooks lazily (kernel imports pull jax;
+    constructing the default python backend must not), returning
+    ``(encrypt_many, sha_many)`` or ``(encrypt_many, sha_many, fused)``
+    where ``None`` selects the numpy T-table core / the ``sha_backend``
+    string path / the two-pass route respectively. A ``fused`` hook is
+    ``(ciphertexts, keys) -> (digests, plaintexts)`` in one pass —
+    ``convergent.decrypt_chunks`` compares the digests before releasing
+    plaintext, so tamper semantics are hook-independent.
     ``threads=None`` leaves tile threading to the decoder default;
     ``1`` means the kernel owns its parallelism (XLA / Pallas)."""
 
@@ -119,7 +136,10 @@ class DecodeBackend:
 
     def hooks(self) -> tuple:
         if self._hooks is None:
-            self._hooks = self.loader() if self.loader else (None, None)
+            h = self.loader() if self.loader else (None, None)
+            if len(h) == 2:          # legacy two-pass loaders
+                h = h + (None,)
+            self._hooks = h
         return self._hooks
 
     @property
@@ -129,6 +149,10 @@ class DecodeBackend:
     @property
     def sha_many(self):
         return self.hooks()[1]
+
+    @property
+    def fused(self):
+        return self.hooks()[2]
 
 
 _REGISTRY: dict[str, DecodeBackend] = {}
@@ -157,7 +181,7 @@ def _auto_backend_name() -> str:
     import jax
     plat = jax.default_backend()
     if plat == "tpu":
-        return "bitsliced"
+        return "bitsliced-fused"
     if plat == "gpu":
         return "xla"
     return "python"
@@ -223,6 +247,13 @@ def _load_bitsliced():
     return encrypt_many_bitsliced, sha256_many_pallas
 
 
+def _load_fused():
+    from repro.kernels.aes import encrypt_many_bitsliced
+    from repro.kernels.fused import fused_verify_decrypt
+    from repro.kernels.sha256 import sha256_many_pallas
+    return encrypt_many_bitsliced, sha256_many_pallas, fused_verify_decrypt
+
+
 register_backend(DecodeBackend(
     "python", "batched numpy T-table AES + hashlib verify (CPU fast "
     "path: hashlib releases the GIL and runs at memory bandwidth)"),
@@ -235,13 +266,91 @@ register_backend(DecodeBackend(
     "bitsliced", "gather-free Pallas kernels: bit-plane AES-CTR "
     "(Boyar-Peralta S-box circuit) + lockstep SHA-256 verify (TPU VPU; "
     "Pallas interpreter off-TPU)", threads=1, loader=_load_bitsliced))
+register_backend(DecodeBackend(
+    "bitsliced-fused", "ONE fused pass: lockstep SHA-256 digests + "
+    "bitsliced AES-CTR keystream XOR from a single walk over each "
+    "ciphertext tile, per-chunk round keys broadcast in-kernel "
+    "(kernels/fused; Pallas on TPU, whole-batch XLA jit elsewhere)",
+    threads=1, loader=_load_fused), aliases=("fused",))
+
+
+# ------------------------------------------------------------- autotune
+
+_TILE_CANDIDATES = (64 << 10, 128 << 10, 256 << 10, 512 << 10, 1 << 20)
+_AUTOTUNE_CACHE: dict[str, int] = {}
+_AUTOTUNE_LOCK = threading.Lock()
+
+
+def autotune_tile_bytes(backend_name: str, *, budget_s: float = 0.25,
+                        chunk_bytes: int = 4096,
+                        force: bool = False) -> int:
+    """Best ``max_batch_bytes`` for `backend_name` on THIS machine: a
+    small timed sweep over tile-size candidates at first use, cached
+    per process. Each candidate decodes one synthetic tile of
+    ``chunk_bytes`` chunks through the backend's real combined pass
+    (the fused hook when present, else verify + keystream) and the
+    highest bytes/s wins.
+
+    The sweep is budgeted: candidates are tried starting from the
+    backend's registered default, and once ``budget_s`` of measurement
+    has elapsed no further candidates start — so a compile-heavy first
+    call (jit'd backends) settles on the default instead of stalling a
+    restore. ``REPRO_NO_AUTOTUNE=1`` (env) disables the sweep;
+    explicit ``ServiceConfig``/``ReadPolicy`` integers bypass it
+    entirely (see ``BatchDecoder``). ``force=True`` re-measures."""
+    resolved = resolve_backend_name(backend_name)
+    if resolved == "serial":
+        return DEFAULT_MAX_BATCH_BYTES
+    backend = _REGISTRY[resolved]
+    if os.environ.get("REPRO_NO_AUTOTUNE"):
+        return backend.tile_bytes
+    with _AUTOTUNE_LOCK:
+        if not force and resolved in _AUTOTUNE_CACHE:
+            return _AUTOTUNE_CACHE[resolved]
+        import numpy as np
+        from repro.core.crypto import aes
+        enc, sha, fused = backend.hooks()
+        rng = np.random.default_rng(0xA070)
+        candidates = [backend.tile_bytes] + [
+            c for c in _TILE_CANDIDATES if c != backend.tile_bytes]
+        best = backend.tile_bytes
+        best_rate = 0.0
+        spent = 0.0
+        for cand in candidates:
+            nchunks = max(1, cand // chunk_bytes)
+            cts = [rng.integers(0, 256, chunk_bytes, np.uint8).tobytes()
+                   for _ in range(nchunks)]
+            keys = [bytes(rng.integers(0, 256, 32, np.uint8))
+                    for _ in range(nchunks)]
+            t0 = time.perf_counter()
+            if fused is not None:
+                fused(cts, keys)
+            else:
+                if sha is not None:
+                    sha(cts)
+                else:
+                    import hashlib
+                    for ct in cts:
+                        hashlib.sha256(ct).digest()
+                aes.ctr_keystream_many(keys, [len(ct) for ct in cts],
+                                       encrypt_many=enc)
+            dt = time.perf_counter() - t0
+            rate = (nchunks * chunk_bytes) / max(dt, 1e-9)
+            if rate > best_rate:
+                best_rate, best = rate, cand
+            spent += dt
+            if spent > budget_s:
+                break
+        _AUTOTUNE_CACHE[resolved] = best
+        COUNTERS.inc("decode.autotuned_backends")
+        return best
 
 
 class BatchDecoder:
     """Decodes {name: ciphertext} batches against manifest ChunkRefs."""
 
     def __init__(self, backend: str = "numpy",
-                 max_batch_bytes: int | None = None,
+                 max_batch_bytes: int | str | None = None,
                  threads: int | None = None,
                  sha_backend: str = "hashlib",
                  eager_flush: bool = False,
@@ -254,7 +363,11 @@ class BatchDecoder:
         self.eager_flush = bool(eager_flush)
         self.eager_min_bytes = DEFAULT_EAGER_MIN_BYTES \
             if eager_min_bytes is None else max(0, int(eager_min_bytes))
-        if max_batch_bytes is None:
+        if max_batch_bytes == "auto":
+            # measured per backend per process; explicit ints always win
+            max_batch_bytes = autotune_tile_bytes(resolved) \
+                if self.backend_obj else DEFAULT_MAX_BATCH_BYTES
+        elif max_batch_bytes is None:                # backend default
             max_batch_bytes = self.backend_obj.tile_bytes \
                 if self.backend_obj else DEFAULT_MAX_BATCH_BYTES
         self.max_batch_bytes = max(1, int(max_batch_bytes))
@@ -262,8 +375,10 @@ class BatchDecoder:
         self.sha_backend = sha_backend
         self._encrypt_many = None
         self._sha_many = None
+        self._fused = None
         if self.backend_obj is not None:
-            self._encrypt_many, self._sha_many = self.backend_obj.hooks()
+            (self._encrypt_many, self._sha_many,
+             self._fused) = self.backend_obj.hooks()
             if self.backend_obj.threads is not None:
                 # the kernel owns its parallelism (XLA / Pallas)
                 self.threads = self.backend_obj.threads
@@ -492,7 +607,8 @@ class BatchDecoder:
                 cts, [r.key for r in part], [r.sha256 for r in part],
                 sha_backend=self.sha_backend,
                 encrypt_many=self._encrypt_many,
-                sha_many=self._sha_many)
+                sha_many=self._sha_many,
+                fused=self._fused)
         except convergent.IntegrityError as e:
             return {}, [part[i].name for i in e.bad_positions]
         return {r.name: p for r, p in zip(part, plains)}, []

@@ -97,9 +97,12 @@ class ReadPolicy:
 
     ``parallelism`` — width of the origin fetch pipeline.
     ``max_batch_bytes`` / ``decode_backend`` — decode-stage overrides
-    (``None`` = the service's configured default). ``decode_backend``
-    names a registered decode backend (``core.decode`` registry:
-    ``python``/``xla``/``bitsliced``, legacy aliases ``numpy``/``jax``,
+    (``None`` = the service's configured default, which is itself
+    ``"auto"`` = per-backend autotuned tile unless the config pins an
+    int; an explicit int here always wins over the autotuner).
+    ``decode_backend`` names a registered decode backend
+    (``core.decode`` registry: ``python``/``xla``/``bitsliced``/
+    ``bitsliced-fused``, legacy aliases ``numpy``/``jax``/``fused``,
     the ``serial`` oracle, or ``auto`` to probe the platform).
     ``queue_depth`` — streamed hand-off queue bound (backpressure).
     ``eager_flush`` — idle-queue opportunistic flush: decode the partial
@@ -174,7 +177,10 @@ class ServiceConfig:
     fetch_concurrency: int = 16         # 0 = unbounded origin reads
     decode_backend: str = "numpy"
     decode_threads: int | None = None
-    max_batch_bytes: int = DEFAULT_MAX_BATCH_BYTES
+    # "auto" = per-backend autotuned tile (decode.autotune_tile_bytes:
+    # small timed sweep at first use, cached per process). Any explicit
+    # int (here or per-read via ReadPolicy.max_batch_bytes) wins.
+    max_batch_bytes: int | str = "auto"
     eager_min_bytes: int = DEFAULT_EAGER_MIN_BYTES
     session_cap: int = 64               # LRU session bound (0 = unbounded)
     session_ttl_s: float | None = None  # None = no idle expiry

@@ -82,6 +82,49 @@ def pack_round_keys(rks: np.ndarray) -> np.ndarray:
         planes.reshape(8, nr, 16, -1).transpose(1, 0, 2, 3))
 
 
+# -------------------------------------- on-device (xp-generic) transposes
+#
+# Same layouts as the numpy versions above, expressed as shifts/ORs so
+# they trace under jit and the whole tile goes device-resident ONCE —
+# the host-side ``np.unpackbits`` pack was ~20ms (state) / ~140ms (round
+# keys) per 256 KiB tile, all of it VPU-shaped work. ``xp=np`` runs the
+# identical code eagerly (the property-test oracle).
+
+def pack_planes_xp(bytes_mp, xp=jnp):
+    """(M, P) uint8/any-int bytes -> (8, P, M/32) uint32 bit planes —
+    the device-side twin of ``pack_planes`` (byte values above 255 are
+    taken mod 256 via the low 8 bit extractions)."""
+    m, p = bytes_mp.shape
+    x = bytes_mp.astype(xp.uint32).reshape(m // 32, 32, p)       # (W,32,P)
+    bit_i = xp.arange(8, dtype=xp.uint32)[:, None, None, None]
+    bits = (x[None] >> bit_i) & xp.uint32(1)                     # (8,W,32,P)
+    lane_k = xp.arange(32, dtype=xp.uint32)[None, None, :, None]
+    # disjoint bit positions, so the sum is an OR
+    words = (bits << lane_k).sum(axis=2, dtype=xp.uint32)        # (8,W,P)
+    return words.transpose(0, 2, 1)                              # (8,P,W)
+
+
+def unpack_planes_xp(planes, xp=jnp):
+    """(8, P, W) uint32 bit planes -> (32*W, P) uint8 bytes — the
+    device-side twin of ``unpack_planes`` (callers slice off padding)."""
+    _, p, w = planes.shape
+    lane_k = xp.arange(32, dtype=xp.uint32)[None, None, None, :]
+    bits = (planes[..., None] >> lane_k) & xp.uint32(1)      # (8,P,W,32)
+    bit_i = xp.arange(8, dtype=xp.uint32)[:, None, None, None]
+    acc = (bits << bit_i).sum(axis=0, dtype=xp.uint32)       # (P,W,32)
+    return acc.transpose(1, 2, 0).reshape(w * 32, p).astype(xp.uint8)
+
+
+def pack_round_keys_xp(rks, xp=jnp):
+    """(M, R+1, 4) uint32 round-key columns -> (R+1, 8, 16, M/32) uint32
+    bit planes — the device-side twin of ``pack_round_keys``."""
+    m, nr, _ = rks.shape
+    sh = xp.uint32(24) - xp.uint32(8) * xp.arange(4, dtype=xp.uint32)
+    b = (rks[..., None] >> sh) & xp.uint32(0xFF)             # (M,nr,4,4)
+    planes = pack_planes_xp(b.reshape(m, nr * 16), xp)       # (8,nr*16,W)
+    return planes.reshape(8, nr, 16, -1).transpose(1, 0, 2, 3)
+
+
 # ------------------------------------------------------- round function
 #
 # Helpers take/return a LIST of 8 plane arrays shaped (16, L) — bit
@@ -298,12 +341,12 @@ def broadcast_pad(blocks_u8: np.ndarray, round_keys: np.ndarray,
     return blocks_u8, round_keys
 
 
-@functools.partial(jax.jit, static_argnames=("rounds",))
-def encrypt_planes(planes, rk_planes, rounds: int):
-    """jit'd plane-level reference: (8, 16, W) x (R+1, 8, 16, W) ->
-    (8, 16, W), all uint32. The middle rounds run under a ``fori_loop``
-    so XLA compiles ONE round body (~370 ops), not rounds-many — the
-    same structure the Pallas kernel uses."""
+def encrypt_planes_body(planes, rk_planes, rounds: int):
+    """Traceable plane pipeline: (8, 16, W) x (R+1, 8, 16, W) ->
+    (8, 16, W). The middle rounds run under a ``fori_loop`` so XLA
+    compiles ONE round body (~370 ops), not rounds-many. Plain function
+    (no jit) so Pallas kernel bodies — which cannot nest a jit — and
+    jit'd wrappers share the exact same trace."""
     x = jnp.stack(add_round_key([planes[i] for i in range(8)],
                                 rk_planes[0]))
 
@@ -314,6 +357,12 @@ def encrypt_planes(planes, rk_planes, rounds: int):
     x = jax.lax.fori_loop(1, rounds, body, x)
     return jnp.stack(final_round([x[i] for i in range(8)],
                                  rk_planes[rounds]))
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def encrypt_planes(planes, rk_planes, rounds: int):
+    """jit'd plane-level reference over ``encrypt_planes_body``."""
+    return encrypt_planes_body(planes, rk_planes, rounds)
 
 
 def encrypt_blocks_bitsliced(blocks_u8: np.ndarray,

@@ -11,6 +11,10 @@ distinct chunk count.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import on_tpu
@@ -51,30 +55,80 @@ def ctr_keystream_many_jax(keys: list, nbytes: list,
                                   encrypt_many=encrypt_many_jax)
 
 
+@functools.partial(jax.jit, static_argnames=("rounds", "interpret"))
+def _encrypt_device(blocks_u8, rk_chunks, idx, *, rounds, interpret):
+    """Device-resident bitsliced pipeline: uint8 blocks go on-device
+    ONCE, then pack / round-key transpose / circuit / unpack all trace
+    under one jit. Round keys arrive one schedule per CHUNK
+    ((C, R+1, 4) uint32) plus a per-block chunk index — the per-block
+    expansion is a device gather, not a host ``np.repeat``."""
+    per_block = jnp.take(rk_chunks, idx, axis=0)         # (M, R+1, 4)
+    planes = jax.lax.bitcast_convert_type(
+        bitslice.pack_planes_xp(blocks_u8, jnp), jnp.int32)
+    rkp = jax.lax.bitcast_convert_type(
+        bitslice.pack_round_keys_xp(per_block, jnp), jnp.int32)
+    from repro.kernels.aes.bitslice_pallas import encrypt_planes_pallas
+    out = encrypt_planes_pallas(planes, rkp, rounds=rounds,
+                                interpret=interpret)
+    return bitslice.unpack_planes_xp(
+        jax.lax.bitcast_convert_type(out, jnp.uint32), jnp)
+
+
 def encrypt_many_bitsliced(blocks_u8: np.ndarray, rks: np.ndarray, *,
+                           counts: np.ndarray | None = None,
                            interpret: bool | None = None) -> np.ndarray:
-    """(N, 16) uint8 blocks + (N, rounds+1, 4) uint32 per-block round
-    keys -> (N, 16) uint8, through the gather-free bitsliced Pallas
-    kernel: bit-transpose into planes, run the Boyar–Peralta circuit
-    tiles, transpose back. Lane-word counts are bucketed to powers of
-    two so the kernel compiles O(log batch) times. ``interpret=None``
-    auto-selects the Pallas interpreter off-TPU (the CPU fallback)."""
+    """(N, 16) uint8 blocks -> (N, 16) uint8 through the gather-free
+    bitsliced Pallas kernel, with the bit-plane pack/unpack transposes
+    ON DEVICE (host marshalling is two index builds, not bit twiddling).
+
+    Round keys come in two shapes:
+    * legacy: ``rks`` is (N, rounds+1, 4) per-block or (rounds+1, 4)
+      shared (the ``encrypt_many`` hook contract);
+    * run-length (``counts`` given): ``rks`` is (C, rounds+1, 4) — ONE
+      schedule per chunk — and ``counts[c]`` blocks use schedule ``c``
+      (``sum(counts) == N``). ``ctr_keystream_many`` selects this path
+      via the ``per_chunk_rks`` attribute, skipping its host-side
+      ``np.repeat`` of 60-word schedules per block.
+
+    Lane-word and chunk counts are bucketed to powers of two so the jit
+    compiles O(log batch) times. ``interpret=None`` auto-selects the
+    Pallas interpreter off-TPU (the CPU fallback)."""
     n = blocks_u8.shape[0]
     if n == 0:
         return np.empty((0, 16), np.uint8)
     if interpret is None:
         interpret = not on_tpu()
+    if counts is None:
+        if rks.ndim == 2:
+            rks = rks[None]
+            counts = np.array([n], np.int64)
+        else:                      # per-block schedules: chunk == block
+            counts = np.ones(n, np.int64)
+    rks = np.ascontiguousarray(np.asarray(rks, np.uint32))
+    idx = np.repeat(np.arange(len(counts), dtype=np.int32),
+                    np.asarray(counts))
+    assert idx.shape[0] == n, (idx.shape, n)
     words = _MIN_WORDS
     while words * 32 < n:
         words <<= 1
-    blocks_u8, rks = bitslice.broadcast_pad(blocks_u8, rks, words * 32)
+    pad = words * 32 - n
+    if pad:                        # padded lanes rerun the last block
+        blocks_u8 = np.concatenate(
+            [blocks_u8, np.repeat(blocks_u8[-1:], pad, axis=0)])
+        idx = np.concatenate([idx, np.full(pad, idx[-1], np.int32)])
+    c = rks.shape[0]
+    cb = 8
+    while cb < c:
+        cb <<= 1
+    if cb > c:
+        rks = np.concatenate([rks, np.repeat(rks[-1:], cb - c, axis=0)])
     rounds = rks.shape[1] - 1
-    planes = bitslice.pack_planes(blocks_u8).view(np.int32)
-    rkp = bitslice.pack_round_keys(np.ascontiguousarray(rks)).view(np.int32)
-    from repro.kernels.aes.bitslice_pallas import encrypt_planes_pallas
-    out = encrypt_planes_pallas(planes, rkp, rounds=rounds,
-                                interpret=interpret)
-    return bitslice.unpack_planes(np.asarray(out).view(np.uint32), n)
+    out = _encrypt_device(blocks_u8, rks, idx, rounds=rounds,
+                          interpret=interpret)
+    return np.asarray(out)[:n]
+
+
+encrypt_many_bitsliced.per_chunk_rks = True
 
 
 def ctr_keystream_many_bitsliced(keys: list, nbytes: list,

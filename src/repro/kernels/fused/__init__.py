@@ -1,0 +1,6 @@
+"""Fused verify+decrypt kernel: SHA-256 digests and AES-CTR plaintext
+from ONE tiled pass over each ciphertext (see ``fusedp`` for the
+layout). ``fused_verify_decrypt`` is the registry-facing hook."""
+from repro.kernels.fused.ops import fused_verify_decrypt
+
+__all__ = ["fused_verify_decrypt"]

@@ -1,0 +1,147 @@
+"""Fused verify+decrypt: one tiled pass over each ciphertext tile.
+
+The two-pass decode (``sha256_many_pallas`` then the bitsliced
+keystream) streams every ciphertext byte through the device twice —
+once as SHA schedule words, once as AES state planes — and pays two
+host round-trips. This module runs BOTH in one pass over one layout:
+
+* the tile arrives exactly like the SHA kernel's input — padded
+  schedule words (maxb, 16, lanes) int32, one chunk per lane — and the
+  lockstep compression (``sha256p.sha_block_fold``) folds it to per-lane
+  digests;
+* the SAME lanes get their AES-CTR keystream from the bitsliced circuit
+  (``bitslice.encrypt_planes_body``) in an m-major plane layout: global
+  AES block ``g = m * lanes + c`` (m = counter index within the chunk,
+  c = chunk lane). Because the lane count is a multiple of 32, all 32
+  blocks of a plane word share ``m`` — so the zero-IV counter planes
+  are CONSTANT words (0 or ~0, no iota byte math per block) and the
+  per-chunk round-key planes broadcast to per-block by a plain
+  ``jnp.tile`` along the word axis. This is where the run-length
+  structure of convergent round keys pays off: the packed key tensor is
+  per-CHUNK (lanes/32 words), not per-block (maxb*4*lanes/32 words);
+* the keystream planes transpose back to schedule-word layout and XOR
+  into the ciphertext words in-register: plaintext comes back in the
+  same (maxb, 16, lanes) tensor the digests were computed from. One
+  device visit per ciphertext byte.
+
+Both a Pallas kernel (lane-tiled grid, the TPU shape) and a pure-jnp
+jit (the off-TPU fast path — XLA fuses the whole pass) share every
+traced helper, so kernel == jit == two-pass oracles by construction.
+Tamper detection stays per-chunk: the host adapter (``ops``) compares
+digests before releasing any plaintext.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.aes.bitslice import encrypt_planes_body
+from repro.kernels.sha256.sha256p import sha_block_fold
+
+FUSED_LANE_BLOCK = 128      # chunk lanes per grid step (multiple of 32)
+
+
+def _ctr_planes(maxb: int, blk: int):
+    """Bit planes of the zero-IV counter blocks in m-major layout:
+    (8, 16, maxb*4*blk//32) int32. Word w covers blocks of counter
+    ``m = w // (blk//32)`` — every lane of a word shares m, so each
+    word is 0 or ~0 (-1): the counter tensor is pure broadcast."""
+    m_vals = jax.lax.broadcasted_iota(
+        jnp.uint32, (maxb * 4, blk // 32), 0).reshape(-1)    # (W,)
+    rows = []
+    for i in range(8):
+        for p in range(16):
+            sh = 8 * (15 - p) + i        # bit i of counter byte p
+            if sh <= 31:
+                bit = ((m_vals >> jnp.uint32(sh)) & jnp.uint32(1))
+                rows.append(-(bit.astype(jnp.int32)))
+            else:
+                rows.append(jnp.zeros(m_vals.shape, jnp.int32))
+    return jnp.stack(rows).reshape(8, 16, -1)
+
+
+def _planes_to_words(ksp, maxb: int, blk: int):
+    """Keystream planes (8, 16, W) int32, m-major -> big-endian SHA
+    schedule-word layout (maxb, 16, blk) int32. Chunk byte offset of
+    (AES block m, state position p) is ``16*m + p`` (p is the in-block
+    byte index), so with m = 4*b_sha + q and p = 4*w4 + j the schedule
+    word index is t = 4*q + w4 and j is the byte within the word."""
+    k = jnp.arange(32, dtype=jnp.int32)
+    b = jnp.zeros(ksp.shape[1:] + (32,), jnp.int32)
+    for i in range(8):
+        b = b | (((ksp[i][..., None] >> k) & 1) << i)        # (16, W, 32)
+    b = b.reshape(16, maxb * 4, blk)                         # [p, m, c]
+    b = b.reshape(4, 4, maxb, 4, blk)          # [w4, j, b_sha, q, c]
+    b = b.transpose(2, 3, 0, 1, 4)             # [b_sha, q, w4, j, c]
+    w = (b[..., 0, :] << 24) | (b[..., 1, :] << 16) \
+        | (b[..., 2, :] << 8) | b[..., 3, :]   # [b_sha, q, w4, c]
+    return w.reshape(maxb, 16, blk)
+
+
+def _fused_body(wv, nb, rkp, *, maxb: int, rounds: int):
+    """The shared fused pass: wv (maxb, 16, blk) int32 schedule words,
+    nb (blk,) int32 block counts, rkp (rounds+1, 8, 16, blk//32) int32
+    per-CHUNK key planes -> (digest lanes tuple, plaintext words)."""
+    state = sha_block_fold(wv, nb, maxb)
+    blk = wv.shape[-1]
+    ctr = _ctr_planes(maxb, blk)
+    rk_full = jnp.tile(rkp, (1, 1, 1, maxb * 4))
+    ksp = encrypt_planes_body(ctr, rk_full, rounds)
+    return state, wv ^ _planes_to_words(ksp, maxb, blk)
+
+
+def _fused_kernel(words_ref, nb_ref, rk_ref, dig_ref, out_ref, *,
+                  maxb: int, rounds: int):
+    state, plain = _fused_body(words_ref[...], nb_ref[0], rk_ref[...],
+                               maxb=maxb, rounds=rounds)
+    for i in range(8):
+        dig_ref[i] = state[i]
+    out_ref[...] = plain
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("maxb", "rounds", "interpret", "block"))
+def fused_lanes_pallas(words, nblocks, rk_planes, *, maxb: int,
+                       rounds: int, interpret: bool = False,
+                       block: int = FUSED_LANE_BLOCK):
+    """Pallas launch: words (maxb, 16, N) int32, nblocks (1, N) int32,
+    rk_planes (rounds+1, 8, 16, N/32) int32 per-chunk key planes ->
+    (digests (8, N) int32, plaintext words (maxb, 16, N) int32). N must
+    be a multiple of 32 (callers bucket lanes to powers of two)."""
+    n = words.shape[-1]
+    blk = min(block, n)
+    while n % blk:
+        blk //= 2
+    grid = (n // blk,)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, maxb=maxb, rounds=rounds),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((maxb, 16, blk), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, blk), lambda i: (0, i)),
+            pl.BlockSpec((rounds + 1, 8, 16, blk // 32),
+                         lambda i: (0, 0, 0, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((8, blk), lambda i: (0, i)),
+            pl.BlockSpec((maxb, 16, blk), lambda i: (0, 0, i)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((8, n), jnp.int32),
+            jax.ShapeDtypeStruct((maxb, 16, n), jnp.int32),
+        ),
+        interpret=interpret,
+    )(words, nblocks, rk_planes)
+
+
+@functools.partial(jax.jit, static_argnames=("maxb", "rounds"))
+def fused_lanes_jit(words, nblocks, rk_planes, *, maxb: int, rounds: int):
+    """The same fused pass as ONE XLA jit over the full lane batch —
+    the off-TPU fast path (interpreter-mode Pallas would serialize the
+    vector ops the fusion exists to combine)."""
+    state, plain = _fused_body(words, nblocks[0], rk_planes,
+                               maxb=maxb, rounds=rounds)
+    return jnp.stack(state), plain

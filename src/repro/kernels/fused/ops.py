@@ -1,0 +1,78 @@
+"""Host adapter for the fused verify+decrypt pass.
+
+``fused_verify_decrypt`` is the ``fused`` hook of the decode-backend
+registry (``core.decode``): list of ciphertexts + per-chunk AES keys
+in, (digests, plaintexts) out — digests byte-identical to hashlib,
+plaintexts byte-identical to the serial CTR oracle. The caller
+(``convergent.decrypt_chunks``) compares digests against the expected
+chunk names BEFORE releasing any plaintext, so per-chunk tamper
+detection and the eviction/retry semantics are unchanged.
+
+Marshalling mirrors ``sha256.ops.sha256_many_pallas``: one padded
+schedule-word tensor per tile, lanes bucketed to powers of two and
+message blocks to coarse steps so the pass retraces O(log) times.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.crypto.aes import expand_key
+from repro.core.crypto.sha256v import _pad
+from repro.kernels import on_tpu
+from repro.kernels.aes import bitslice
+from repro.kernels.sha256.ops import _bucket_blocks, _bucket_lanes
+from repro.kernels.fused.fusedp import fused_lanes_jit, fused_lanes_pallas
+
+
+def fused_verify_decrypt(cts: list, keys: list, *,
+                         interpret: bool | None = None,
+                         pallas: bool | None = None) -> tuple:
+    """One fused device pass over N ciphertext chunks: returns
+    (digests, plaintexts) — digests[i] == sha256(cts[i]).digest() and
+    plaintexts[i] == AES-256-CTR(keys[i], zero IV) ^ cts[i], both as
+    bytes. ``pallas=None`` routes through the Pallas kernel on TPU and
+    the whole-batch XLA jit elsewhere; ``interpret`` only applies to
+    the Pallas route."""
+    n = len(cts)
+    if n == 0:
+        return [], []
+    if pallas is None:
+        pallas = on_tpu()
+    if interpret is None:
+        interpret = not on_tpu()
+    padded = [_pad(ct) for ct in cts]
+    nbl = [len(p) // 64 for p in padded]
+    maxb = _bucket_blocks(max(nbl))
+    lanes = _bucket_lanes(n)
+    words = np.zeros((maxb, 16, lanes), np.uint32)
+    for i, p in enumerate(padded):
+        w = np.frombuffer(p, dtype=">u4").reshape(-1, 16)
+        words[:w.shape[0], :, i] = w
+    nb = np.zeros((1, lanes), np.int32)
+    nb[0, :n] = nbl
+    expanded: dict[bytes, np.ndarray] = {}
+    per_key = []
+    for k in keys:
+        rk = expanded.get(k)
+        if rk is None:
+            rk = expanded[k] = expand_key(k)
+        per_key.append(rk)
+    rks = np.stack(per_key)
+    if lanes > n:       # edge-repeat: padded lanes run a discarded chunk
+        rks = np.concatenate(
+            [rks, np.repeat(rks[-1:], lanes - n, axis=0)])
+    rounds = rks.shape[1] - 1
+    rkp = bitslice.pack_round_keys(np.ascontiguousarray(rks)).view(np.int32)
+    if pallas:
+        dig, plain = fused_lanes_pallas(words.view(np.int32), nb, rkp,
+                                        maxb=maxb, rounds=rounds,
+                                        interpret=interpret)
+    else:
+        dig, plain = fused_lanes_jit(words.view(np.int32), nb, rkp,
+                                     maxb=maxb, rounds=rounds)
+    dig_w = np.asarray(dig).view(np.uint32).T[:n].astype(">u4")
+    digests = [dig_w[i].tobytes() for i in range(n)]
+    plain_w = np.ascontiguousarray(
+        np.asarray(plain).view(np.uint32).transpose(2, 0, 1)).astype(">u4")
+    plains = [plain_w[i].tobytes()[:len(ct)] for i, ct in enumerate(cts)]
+    return digests, plains

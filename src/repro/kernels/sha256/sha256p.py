@@ -48,9 +48,12 @@ def _shr(x, n: int):
     return jax.lax.shift_right_logical(x, n)
 
 
-def _sha_kernel(words_ref, nb_ref, out_ref, *, maxb):
-    wv = words_ref[...]                       # (maxb, 16, blk) int32
-    nb = nb_ref[0]                            # (blk,) int32
+def sha_block_fold(wv, nb, maxb: int):
+    """Fold ``maxb`` message blocks through the lockstep compression
+    function: wv (maxb, 16, L) int32 schedule words, nb (L,) int32
+    per-lane block counts -> tuple of 8 (L,) int32 digest lanes. Plain
+    traceable function so both ``_sha_kernel`` and the fused
+    verify+decrypt kernel (``kernels.fused``) share the exact rounds."""
 
     def block_body(b, state):
         wb = jax.lax.dynamic_index_in_dim(wv, b, 0, keepdims=False)
@@ -75,7 +78,11 @@ def _sha_kernel(words_ref, nb_ref, out_ref, *, maxb):
 
     zeros = jnp.zeros_like(nb)
     state0 = tuple(zeros + jnp.int32(h) for h in _H032)
-    state = jax.lax.fori_loop(0, maxb, block_body, state0)
+    return jax.lax.fori_loop(0, maxb, block_body, state0)
+
+
+def _sha_kernel(words_ref, nb_ref, out_ref, *, maxb):
+    state = sha_block_fold(words_ref[...], nb_ref[0], maxb)
     for i in range(8):
         out_ref[i] = state[i]
 

@@ -68,10 +68,17 @@ def main():
                     choices=known_backend_names(),
                     help="post-fetch batch decode backend from the "
                          "core.decode registry: python/numpy = T-table "
+                         "numpy + hashlib; bitsliced-fused/fused = ONE "
+                         "fused verify+decrypt pass per tile; "
                          "AES + hashlib; xla/jax = jit'd gather pass; "
                          "bitsliced = gather-free Pallas AES + lockstep "
                          "SHA verify kernels; auto = probe the "
                          "platform; serial = per-chunk oracle")
+    ap.add_argument("--max-batch-bytes", type=int, default=None,
+                    help="decode tile size in bytes (default: per-"
+                         "backend autotuned at first use — a small "
+                         "timed sweep, cached per process; an explicit "
+                         "value here pins the tile and skips the sweep)")
     ap.add_argument("--eager-min-bytes", type=int, default=None,
                     help="minimum partial-tile bytes before an eager "
                          "flush may fire (default: ServiceConfig's "
@@ -146,6 +153,8 @@ def main():
         root=root,
         default_policy=policy,
     )
+    if args.max_batch_bytes is not None:
+        svc_cfg.max_batch_bytes = args.max_batch_bytes
     if args.eager_min_bytes is not None:
         svc_cfg.eager_min_bytes = args.eager_min_bytes
     service = ImageService(store, svc_cfg)
