@@ -1,5 +1,5 @@
 # Offline-friendly entry points (no network-dependent packages).
-.PHONY: test verify bench bench-read
+.PHONY: test verify bench bench-read bench-decode bench-fault bench-storm
 
 test: verify     ## alias for verify
 
@@ -17,3 +17,6 @@ bench-decode:    ## per-decode-backend keystream/verify GB/s -> BENCH_e2e.json
 
 bench-fault:     ## §4 resilience: mid-restore faults, hedged GETs, 100-tenant Zipf -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py fault_injection
+
+bench-storm:     ## 1->100 worker cold-start storm through the peer tier -> BENCH_e2e.json
+	PYTHONPATH=src:. python benchmarks/run.py coldstart_storm

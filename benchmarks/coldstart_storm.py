@@ -1,0 +1,306 @@
+"""Cold-start storm: N workers cold-start the SAME image concurrently
+(the paper's headline scale regime — up to 15,000 new containers per
+second for one customer).
+
+Before the peer tier, each worker's `FlightTable` dedups only within
+its own process, so origin traffic is origin x workers: 100 workers
+cold-starting a 48-chunk image cost ~4800 origin GETs. With the
+FaaSNet-style peer mesh (``core.cache.peer``) the FIRST worker to miss
+a chunk fetches it from origin and every other worker receives it
+worker-to-worker (direct directory hits + the provisioning tree under
+in-flight chunks), so origin traffic stays ~O(unique chunks) as the
+fleet grows.
+
+Arms recorded into BENCH_e2e.json (section ``coldstart_storm``):
+
+* ``peer`` — worker sweep 1 -> 100, per-arm origin-GET count, origin/
+  unique ratio, p50/p99 per-worker restore wall, and the peer-tier
+  telemetry (transfers, tree vs direct hits, joins, promotions).
+* ``no_peer`` — the same sweep without the mesh: origin = workers x
+  unique (the blowup the tier removes).
+* ``crashed_peer`` — one worker is CRASHED mid-storm (its FaultPlan
+  flips after it has served K transfers, via the mesh's transfer hook):
+  transfers from it fail and fall through — byte identity must hold and
+  origin traffic stays bounded.
+
+Every worker's restored tree is checked byte-identical to the serial
+per-chunk oracle in EVERY arm.
+
+``--smoke`` is the CI gate (scripts/test.sh / make verify): hard
+non-zero exit on byte divergence in any phase, or if the peer-tier
+storm's origin GETs exceed 2x the unique-chunk count (vs workers-x
+without the tier).
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.cache.distributed import FaultPlan
+from repro.core.cache.peer import PeerMesh
+from repro.core.gc import GenerationalGC
+from repro.core.loader import ImageReader, create_image
+from repro.core.service import ImageService, ReadPolicy, ServiceConfig
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+
+TENANT_KEY = b"P" * 32
+# modest per-worker pipeline: a 100-worker storm in one process is
+# thread-bound, not I/O-bound — wide per-worker fan-out just thrashes
+POLICY = ReadPolicy(mode="streamed", parallelism=2, queue_depth=16)
+
+PEER_COUNTERS = ("peer.transfers", "peer.direct_hits", "peer.tree_hits",
+                 "peer.joins", "peer.misses", "peer.promotions",
+                 "peer.dead_peer_fallthroughs", "peer.deadline_fallthroughs",
+                 "peer.registered_chunks", "read.peer_hits",
+                 "read.peer_fallthroughs")
+
+
+def _build_image(store, root, *, chunks=48, chunk_size=4096, seed=9):
+    """One all-unique image (random floats: no zero elision, no
+    intra-image dedup — every chunk really travels)."""
+    rng = np.random.default_rng(seed)
+    tree = {"w": rng.standard_normal(
+        (chunks * chunk_size // 4,)).astype(np.float32)}
+    blob, stats = create_image(tree, tenant="storm", tenant_key=TENANT_KEY,
+                               store=store, root=root, chunk_size=chunk_size)
+    return tree, blob, stats
+
+
+def _worker_config() -> ServiceConfig:
+    """Per-worker service config: own small COLD L1, no L2 (origin
+    accounting stays pure: every byte comes from peer or origin),
+    single-threaded pinned-tile decode so a 100-worker fleet doesn't
+    spawn 100 autotune sweeps / decode pools worth of threads."""
+    return ServiceConfig(l1_bytes=8 << 20, l2_nodes=0, fetch_concurrency=0,
+                         max_coldstarts=0, decode_backend="numpy",
+                         decode_threads=1, max_batch_bytes=1 << 20)
+
+
+def _fleet(store, n_workers: int, mesh: PeerMesh | None) -> list:
+    """N fresh worker ImageServices — each its own L1 + FlightTable,
+    joined to `mesh` as worker i (or standalone when mesh is None)."""
+    return [ImageService(store, _worker_config(),
+                         peer=mesh.client(i) if mesh is not None else None)
+            for i in range(n_workers)]
+
+
+def storm(store, blob, oracle, n_workers: int, *,
+          mesh: PeerMesh | None) -> dict:
+    """Run one storm: every worker cold-starts the image concurrently
+    (barrier-synchronized), byte-checks against the serial `oracle`.
+    Returns origin/peer counter deltas and per-worker restore walls."""
+    services = _fleet(store, n_workers, mesh)
+    barrier = threading.Barrier(n_workers)
+    walls = [0.0] * n_workers
+    divergent: list[str] = []
+
+    def cold_start(i: int):
+        handle = services[i].open(blob, TENANT_KEY)
+        barrier.wait()
+        t0 = time.perf_counter()
+        flat = handle.restore_tree(policy=POLICY)
+        walls[i] = time.perf_counter() - t0
+        for name in oracle:
+            if not np.array_equal(flat[name], oracle[name]):
+                divergent.append(f"worker {i}: {name}")
+
+    before = COUNTERS.snapshot()
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(n_workers) as pool:
+        list(pool.map(cold_start, range(n_workers)))
+    storm_wall = time.perf_counter() - t0
+    after = COUNTERS.snapshot()
+    for svc in services:
+        svc.close()
+
+    def delta(name):
+        return after.get(name, 0.0) - before.get(name, 0.0)
+
+    out = {
+        "workers": n_workers,
+        "origin_fetches": delta("read.origin_fetches"),
+        "storm_wall_s": storm_wall,
+        "restore_p50_ms": float(np.percentile(walls, 50) * 1e3),
+        "restore_p99_ms": float(np.percentile(walls, 99) * 1e3),
+        "byte_identical": not divergent,
+        "divergent": divergent,
+    }
+    if mesh is not None:
+        out.update({name.replace(".", "_"): delta(name)
+                    for name in PEER_COUNTERS})
+    return out
+
+
+class _CrashAfterServes:
+    """Mesh transfer hook: CRASH the serving worker of the K-th peer
+    transfer, mid-storm — from then on every transfer from it fails and
+    must fall through (direct-holder retry, then L2/origin)."""
+
+    def __init__(self, after: int = 5):
+        self.after = after
+        self.calls = 0
+        self.victim: int | None = None
+        self.mesh: PeerMesh | None = None
+        self._lock = threading.Lock()
+
+    def __call__(self, name, src_wid, dst_wid):
+        with self._lock:
+            self.calls += 1
+            if self.calls == self.after and self.victim is None:
+                self.victim = src_wid
+                self.mesh.set_fault(src_wid, FaultPlan.crashed())
+
+
+def _arms(store, blob, oracle, unique: int, sweep, *,
+          crash_workers: int, fanout: int, deadline_s: float,
+          seed: int = 0) -> dict:
+    """All three arms over one image; `unique` = unique chunk count."""
+    peer_arm = []
+    for n in sweep:
+        mesh = PeerMesh(n, fanout=fanout, deadline_s=deadline_s, seed=seed)
+        r = storm(store, blob, oracle, n, mesh=mesh)
+        r["origin_per_unique"] = r["origin_fetches"] / max(1, unique)
+        peer_arm.append(r)
+    no_peer_arm = []
+    for n in sweep:
+        r = storm(store, blob, oracle, n, mesh=None)
+        r["origin_per_unique"] = r["origin_fetches"] / max(1, unique)
+        no_peer_arm.append(r)
+    hook = _CrashAfterServes(after=5)
+    mesh = PeerMesh(crash_workers, fanout=fanout, deadline_s=deadline_s,
+                    seed=seed, transfer_hook=hook)
+    hook.mesh = mesh
+    crashed = storm(store, blob, oracle, crash_workers, mesh=mesh)
+    crashed["origin_per_unique"] = crashed["origin_fetches"] / max(1, unique)
+    crashed["crashed_worker"] = hook.victim
+    crashed["crash_after_transfers"] = hook.after
+    return {"unique_chunks": unique, "sweep": list(sweep),
+            "fanout": fanout, "peer": peer_arm, "no_peer": no_peer_arm,
+            "crashed_peer": crashed}
+
+
+def run() -> list:
+    from benchmarks.decode_kernels import merge_bench_json
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-storm-"))
+    gc = GenerationalGC(store)
+    tree, blob, stats = _build_image(store, gc.active, chunks=48)
+    oracle = ImageReader(blob, TENANT_KEY, store).restore_tree(batched=False)
+    for n in tree:
+        assert np.array_equal(oracle[n], np.asarray(tree[n])), n
+
+    payload = _arms(store, blob, oracle, stats.unique_chunks,
+                    sweep=[1, 10, 25, 50, 100], crash_workers=50,
+                    fanout=4, deadline_s=2.0)
+    merge_bench_json({"coldstart_storm": payload})
+
+    peer100 = payload["peer"][-1]
+    base100 = payload["no_peer"][-1]
+    crash = payload["crashed_peer"]
+    return [
+        dict(name="storm.origin_per_unique_100w",
+             value=peer100["origin_per_unique"],
+             derived=f"100 workers x {stats.unique_chunks} unique chunks: "
+                     f"{peer100['origin_fetches']:.0f} origin GETs with the "
+                     f"peer tier vs {base100['origin_fetches']:.0f} without "
+                     f"({base100['origin_per_unique']:.0f}x); "
+                     f"{peer100['peer_transfers']:.0f} peer transfers "
+                     f"({peer100['peer_tree_hits']:.0f} tree, "
+                     f"{peer100['peer_direct_hits']:.0f} direct), "
+                     f"byte-identical all workers"),
+        dict(name="storm.restore_p99_ms_100w",
+             value=peer100["restore_p99_ms"],
+             derived=f"per-worker streamed restore wall at 100 workers: "
+                     f"p50 {peer100['restore_p50_ms']:.0f}ms / p99 "
+                     f"{peer100['restore_p99_ms']:.0f}ms (no-peer p99 "
+                     f"{base100['restore_p99_ms']:.0f}ms), storm wall "
+                     f"{peer100['storm_wall_s']:.2f}s"),
+        dict(name="storm.crashed_peer_origin_per_unique",
+             value=crash["origin_per_unique"],
+             derived=f"worker {crash['crashed_worker']} crashed after "
+                     f"{crash['crash_after_transfers']} serves mid-storm "
+                     f"({crash['workers']} workers): byte_identical="
+                     f"{crash['byte_identical']}, "
+                     f"{crash['peer_dead_peer_fallthroughs']:.0f} dead-peer "
+                     f"fallthroughs, {crash['peer_promotions']:.0f} "
+                     f"promotions, {crash['origin_fetches']:.0f} origin GETs"),
+    ]
+
+
+def smoke(workers: int = 12, chunks: int = 24) -> None:
+    """Fast tier-1 gate (scripts/test.sh, make verify): HARD-FAIL
+    (non-zero exit) if any storm worker's restored bytes diverge from
+    the serial oracle — healthy or with a peer crashed mid-transfer —
+    or if the peer-tier storm's origin GETs blow past 2x the
+    unique-chunk count (the no-peer baseline is ~workers-x)."""
+    import sys
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-storm-smoke-"))
+    gc = GenerationalGC(store)
+    tree, blob, stats = _build_image(store, gc.active, chunks=chunks)
+    oracle = ImageReader(blob, TENANT_KEY, store).restore_tree(batched=False)
+    unique = stats.unique_chunks
+    failures = []
+
+    mesh = PeerMesh(workers, fanout=4, deadline_s=2.0, seed=1)
+    healthy = storm(store, blob, oracle, workers, mesh=mesh)
+    failures += healthy["divergent"]
+    if healthy["origin_fetches"] > 2 * unique:
+        failures.append(
+            f"peer-tier origin blowup: {healthy['origin_fetches']:.0f} "
+            f"origin GETs for {unique} unique chunks at {workers} workers "
+            f"(gate: <= {2 * unique})")
+
+    hook = _CrashAfterServes(after=3)
+    mesh = PeerMesh(workers, fanout=4, deadline_s=2.0, seed=2,
+                    transfer_hook=hook)
+    hook.mesh = mesh
+    crashed = storm(store, blob, oracle, workers, mesh=mesh)
+    for d in crashed["divergent"]:
+        failures.append(f"crashed-peer phase: {d}")
+    if crashed["origin_fetches"] > 4 * unique:
+        failures.append(
+            f"crashed-peer origin blowup: {crashed['origin_fetches']:.0f} "
+            f"origin GETs for {unique} unique chunks "
+            f"(gate: <= {4 * unique})")
+
+    baseline = storm(store, blob, oracle, workers, mesh=None)
+    if baseline["origin_fetches"] < workers * unique:
+        failures.append(
+            f"no-peer baseline fetched {baseline['origin_fetches']:.0f} < "
+            f"workers x unique = {workers * unique} — the storm is not "
+            f"actually stampeding (accounting broken?)")
+
+    if failures:
+        print("COLDSTART STORM SMOKE REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print(f"COLDSTART STORM OK: {workers} workers x {unique} unique chunks "
+          f"byte-identical to serial oracle; origin GETs {unique} alone -> "
+          f"{healthy['origin_fetches']:.0f} with peer tier "
+          f"({healthy['peer_transfers']:.0f} peer transfers) vs "
+          f"{baseline['origin_fetches']:.0f} without; crashed worker "
+          f"{hook.victim} mid-storm: byte-identical, "
+          f"{crashed['origin_fetches']:.0f} origin GETs, "
+          f"{crashed['peer_dead_peer_fallthroughs']:.0f} dead-peer "
+          f"fallthroughs")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast cold-start-storm gate (tier-1)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['value']:.6g},\"{row['derived']}\"")

@@ -15,6 +15,8 @@ BENCHES = [
     ("fault_injection", "§4 resilience: mid-restore faults, hedged GETs, "
                         "100-tenant Zipf"),
     ("decode_kernels", "per-backend keystream/verify GB/s (registry)"),
+    ("coldstart_storm", "peer provisioning tier: 1->100 worker "
+                        "cold-start storm"),
     ("parity_kernel", "Listings 1/2 parity vectorization"),
     ("coldstart", "cold-start scale-out"),
     ("roofline_report", "dry-run roofline summary"),

@@ -59,6 +59,16 @@ if [ "$#" -eq 0 ]; then
         echo "FAIL: fault-injection smoke regression (see above)" >&2
         exit 1
     fi
+    # cold-start-storm gate: a worker fleet storming one image through
+    # the peer tier must stay byte-identical to the serial oracle (with
+    # and without a peer crashed mid-transfer) and keep origin GETs
+    # within 2x the unique chunk count (4x for the crashed-peer phase)
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/coldstart_storm.py --smoke; then
+        echo "FAIL: cold-start storm smoke regression (see above)" >&2
+        exit 1
+    fi
     exit 0
 fi
 exec python -m pytest -x -q "$@"

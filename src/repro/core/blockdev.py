@@ -168,12 +168,17 @@ class TieredReader:
     def __init__(self, manifest: Manifest, store, root: str | None = None,
                  l1=None, l2=None, concurrency=None,
                  origin_delay_s: float = 0.0, decoder: BatchDecoder | None = None,
-                 counters=None, flights: FlightTable | None = None):
+                 counters=None, flights: FlightTable | None = None,
+                 peer=None):
         self.m = manifest
         self.store = store
         self.root = root or manifest.root_id
         self.l1 = l1
         self.l2 = l2
+        # optional peer tier (``repro.core.cache.peer.PeerClient``): the
+        # worker-to-worker provisioning mesh, probed between L1 and L2.
+        # Probe order: L1 -> peer -> L2 -> origin.
+        self.peer = peer
         self.concurrency = concurrency
         self.origin_delay_s = origin_delay_s
         self.decoder = decoder if decoder is not None else BatchDecoder()
@@ -222,6 +227,7 @@ class TieredReader:
         try:
             lat = 0.0
             ct = None
+            src = None
             # leader double-check: a previous flight for this name may have
             # backfilled L1 after this caller's probe missed (stampede race)
             if self.l1 is not None:
@@ -229,11 +235,24 @@ class TieredReader:
                 ct = peek(ref.name)
                 if ct is not None:
                     lat += L1_PROBE_S
+            if ct is None and self.peer is not None:
+                # peer probe: a directory hit or joined provisioning
+                # flight transfers worker-to-worker; a miss leaves this
+                # worker leading the mesh flight — the publish/abandon
+                # below settles the lease either way
+                plat, ct = self.peer.get_chunk(ref.name, self.m.chunk_size)
+                lat += plat
+                if ct is not None:
+                    self.counters.inc("read.peer_hits")
+                    if self.l1 is not None:
+                        self.l1.put(ref.name, ct)
             if ct is None and self.l2 is not None:
-                l2lat, ct = self.l2.get_chunk(ref.name, self.m.chunk_size)
+                l2lat, l2ct = self.l2.get_chunk(ref.name, self.m.chunk_size)
                 lat += l2lat
-                if ct is not None and self.l1 is not None:
-                    self.l1.put(ref.name, ct)
+                if l2ct is not None:
+                    ct, src = l2ct, "l2"
+                    if self.l1 is not None:
+                        self.l1.put(ref.name, ct)
             if ct is None:
                 limiter = self.concurrency if self.concurrency is not None \
                     else contextlib.nullcontext()
@@ -242,16 +261,26 @@ class TieredReader:
                         time.sleep(self.origin_delay_s)
                     ct = self.store.get_chunk(self.root, ref.name)
                 lat += ORIGIN_LAT_S
+                src = "origin"
                 self.counters.inc("read.origin_fetches")
                 if self.l2 is not None:
                     self.l2.put_chunk(ref.name, ct)
                 if self.l1 is not None:
                     self.l1.put(ref.name, ct)
+            if src is not None and self.peer is not None:
+                # resolve the mesh flight (joiners receive through the
+                # tree) and register per the mesh's registration policy
+                self.peer.put_chunk(ref.name, ct, source=src)
             flight.ciphertext = ct
             flight.sim_lat = lat
             return ct, lat
         except Exception as e:          # propagate to waiters too
             flight.error = e
+            if self.peer is not None:
+                # release a mesh lease we may hold: promotes a joiner to
+                # leader instead of stranding the whole tree (no-op when
+                # another worker leads)
+                self.peer.abandon(ref.name)
             raise
         finally:
             with self._flight_lock:
@@ -376,14 +405,28 @@ class TieredReader:
         with self._flight_lock:
             self._flights.pop((self.root, name), None)
         flight.event.set()
+        if self.peer is not None:
+            # release any mesh lease we hold for this name: a joiner is
+            # promoted to leader instead of the whole provisioning tree
+            # stranding on our failure (no-op when another worker leads)
+            self.peer.abandon(name)
 
     def _fetch_leaders(self, lead: list, parallelism: int, fb: FetchedBatch,
                        l2_hedge: bool | None = None):
         """Push the names this call leads through the tier stages as
-        batches: L1 double-check -> one batched L2 fetch -> parallel
-        origin pool. Each name's flight resolves the moment its
-        ciphertext lands, so stampeding waiters never wait on the whole
-        batch."""
+        batches: L1 double-check -> peer probe -> one batched L2 fetch
+        -> parallel origin pool. Each name's flight resolves the moment
+        its ciphertext lands, so stampeding waiters never wait on the
+        whole batch.
+
+        The peer probe is non-blocking for in-flight mesh names: direct
+        holder hits resolve inline, names another WORKER is already
+        provisioning are joined on peer pool threads (futures), and
+        only peer-led misses continue to L2/origin now. Joined futures
+        are drained AFTER this call's own fall-through — two workers
+        each leading a chunk the other joined must both keep making
+        progress — and joins that come back empty (promoted to leader,
+        peer death, deadline) take a second fall-through pass."""
         unresolved = dict(lead)
         try:
             pending: list[str] = []
@@ -399,53 +442,93 @@ class TieredReader:
                                          L1_PROBE_S, fb)
                 else:
                     pending.append(name)
-            l2_lat: dict[str, float] = {}
-            if pending and self.l2 is not None:
-                cs = self.m.chunk_size
-                streamed_hits: set[str] = set()
-                l2_kw = {}
-                if self._l2_hedges and l2_hedge is not None:
-                    l2_kw["hedge"] = l2_hedge
-                if self._l2_streams and fb.sink is not None:
-                    # streamed mode: each chunk resolves (and feeds the
-                    # sink) the moment its k-th stripe reconstructs,
-                    # instead of after the whole L2 wave returns
-                    def on_ready(name, lat, ct):
-                        streamed_hits.add(name)
-                        if self.l1 is not None:
-                            self.l1.put(name, ct)
-                        self._resolve_flight(name, unresolved.pop(name),
-                                             ct, lat, fb)
-                    res = self.l2.get_chunks(pending, cs, on_ready=on_ready,
-                                             **l2_kw)
-                elif hasattr(self.l2, "get_chunks"):
-                    res = self.l2.get_chunks(pending, cs, **l2_kw)
-                else:
-                    res = {n: self.l2.get_chunk(n, cs) for n in pending}
-                still = []
-                for name in pending:
-                    if name in streamed_hits:
-                        continue
-                    lat, ct = res[name]
-                    if ct is not None:
-                        if self.l1 is not None:
-                            self.l1.put(name, ct)
-                        self._resolve_flight(name, unresolved.pop(name),
-                                             ct, lat, fb)
-                    else:
-                        l2_lat[name] = lat
-                        still.append(name)
-                pending = still
+            peer_futs: dict = {}
+            if pending and self.peer is not None:
+                def peer_ready(name, lat, ct):
+                    # runs inline for direct hits, on a peer pool thread
+                    # for joined flights — pop defensively: the error
+                    # path may have already poisoned this name
+                    flight = unresolved.pop(name, None)
+                    if flight is None:
+                        return
+                    self.counters.inc("read.peer_hits")
+                    if self.l1 is not None:
+                        self.l1.put(name, ct)
+                    self._resolve_flight(name, flight, ct, lat, fb)
+                pending, peer_futs = self.peer.probe_chunks(
+                    pending, self.m.chunk_size, peer_ready)
             if pending:
-                self._origin_stage(pending, parallelism, l2_lat,
-                                   unresolved, fb)
+                self._fall_through(pending, parallelism, fb, unresolved,
+                                   l2_hedge)
+            if peer_futs:
+                retry = [name for name, fut in peer_futs.items()
+                         if fut.result()[1] is None and name in unresolved]
+                if retry:
+                    self.counters.add("read.peer_fallthroughs", len(retry))
+                    self._fall_through(retry, parallelism, fb, unresolved,
+                                       l2_hedge)
         except BaseException as e:          # propagate to waiters too;
             # BaseException: a KeyboardInterrupt here must still resolve
             # every claimed flight or stampeding waiters hang forever
             # (the serial path gets this from its try/finally)
-            for name, flight in list(unresolved.items()):
-                self._poison_flight(name, unresolved.pop(name), e)
+            for name in list(unresolved):
+                flight = unresolved.pop(name, None)
+                if flight is None:
+                    continue        # a peer pool thread resolved it
+                self._poison_flight(name, flight, e)
             raise
+
+    def _fall_through(self, pending: list, parallelism: int,
+                      fb: FetchedBatch, unresolved: dict,
+                      l2_hedge: bool | None = None):
+        """Lower-tier stages for `pending` led names: one batched L2
+        fetch, then the parallel origin pool. Every acquired ciphertext
+        is published to the peer mesh (resolving any provisioning
+        flight this worker leads)."""
+        l2_lat: dict[str, float] = {}
+        if pending and self.l2 is not None:
+            cs = self.m.chunk_size
+            streamed_hits: set[str] = set()
+            l2_kw = {}
+            if self._l2_hedges and l2_hedge is not None:
+                l2_kw["hedge"] = l2_hedge
+            if self._l2_streams and fb.sink is not None:
+                # streamed mode: each chunk resolves (and feeds the
+                # sink) the moment its k-th stripe reconstructs,
+                # instead of after the whole L2 wave returns
+                def on_ready(name, lat, ct):
+                    streamed_hits.add(name)
+                    if self.l1 is not None:
+                        self.l1.put(name, ct)
+                    if self.peer is not None:
+                        self.peer.put_chunk(name, ct, source="l2")
+                    self._resolve_flight(name, unresolved.pop(name),
+                                         ct, lat, fb)
+                res = self.l2.get_chunks(pending, cs, on_ready=on_ready,
+                                         **l2_kw)
+            elif hasattr(self.l2, "get_chunks"):
+                res = self.l2.get_chunks(pending, cs, **l2_kw)
+            else:
+                res = {n: self.l2.get_chunk(n, cs) for n in pending}
+            still = []
+            for name in pending:
+                if name in streamed_hits:
+                    continue
+                lat, ct = res[name]
+                if ct is not None:
+                    if self.l1 is not None:
+                        self.l1.put(name, ct)
+                    if self.peer is not None:
+                        self.peer.put_chunk(name, ct, source="l2")
+                    self._resolve_flight(name, unresolved.pop(name),
+                                         ct, lat, fb)
+                else:
+                    l2_lat[name] = lat
+                    still.append(name)
+            pending = still
+        if pending:
+            self._origin_stage(pending, parallelism, l2_lat,
+                               unresolved, fb)
 
     def _origin_stage(self, pending: list, parallelism: int, l2_lat: dict,
                       unresolved: dict, fb: FetchedBatch):
@@ -466,6 +549,8 @@ class TieredReader:
                 self.l2.put_chunk(name, ct)
             if self.l1 is not None:
                 self.l1.put(name, ct)
+            if self.peer is not None:
+                self.peer.put_chunk(name, ct, source="origin")
             return ct, l2_lat.get(name, 0.0) + ORIGIN_LAT_S
 
         first_err = None
@@ -522,10 +607,11 @@ class TieredReader:
     # ------------------------------------------------- stage F + stage D
     def _invalidate_bad(self, err: convergent.IntegrityError):
         """Evict tamper-flagged chunk names from every cache tier (L1
-        entry, L2 stripes) so a retry refetches from origin instead of
-        replaying the bad ciphertext."""
+        entry, L2 stripes, peer directory + holder copies) so a retry
+        refetches from origin instead of replaying the bad ciphertext."""
         invalidators = [getattr(tier, "invalidate", None)
-                        for tier in (self.l1, self.l2) if tier is not None]
+                        for tier in (self.l1, self.l2, self.peer)
+                        if tier is not None]
         invalidators = [inv for inv in invalidators if inv is not None]
         for name in err.bad_positions:
             if isinstance(name, str):

@@ -40,12 +40,13 @@ class HashRing:
     def nodes(self) -> list:
         return sorted(self._nodes)
 
-    def _avg_load(self) -> float:
-        # parallel fetch workers record placements concurrently; iterating
-        # the dict unlocked races those inserts
+    def _snapshot_loads(self) -> dict:
+        # parallel fetch workers record placements concurrently; ONE
+        # locked copy per lookup gives the whole scan (avg, cap, and
+        # every per-node check) a consistent view instead of racing
+        # record_placement's inserts mid-iteration
         with self._load_lock:
-            total = sum(self.loads.values())
-        return total / max(1, len(self._nodes))
+            return dict(self.loads)
 
     def lookup(self, key: str, count: int = 1, bound_loads: bool = False,
                allow_repeats: bool = True) -> list:
@@ -55,7 +56,9 @@ class HashRing:
         stripe isolation beats unavailability)."""
         if not self._ring:
             raise RuntimeError("empty ring")
-        cap = self.load_factor * max(1.0, self._avg_load()) + 1
+        loads = self._snapshot_loads() if bound_loads else {}
+        avg = sum(loads.values()) / max(1, len(self._nodes))
+        cap = self.load_factor * max(1.0, avg) + 1
         start = bisect.bisect_left(self._ring, (_h(key), ""))
         out, seen = [], set()
         i = start
@@ -68,7 +71,7 @@ class HashRing:
             if node in seen or node not in self._nodes:
                 continue
             if bound_loads and len(out) == 0 \
-                    and self.loads.get(node, 0) > cap \
+                    and loads.get(node, 0) > cap \
                     and len(self._nodes) > count:
                 continue
             seen.add(node)

@@ -177,7 +177,13 @@ class RejectingLimiter:
             return True
 
     def release(self):
+        # clamp at zero: a double-release (finally-block running after a
+        # failed try_acquire path, say) must not drive inflight negative
+        # and silently widen the admission gate by one forever
         with self._lock:
+            if self.inflight <= 0:
+                COUNTERS.inc("limiter.release_underflow")
+                return
             self.inflight -= 1
 
 
@@ -190,13 +196,16 @@ class BlockingLimiter:
 
     def __init__(self, max_inflight: int):
         self.max_inflight = max_inflight
-        self._sem = threading.Semaphore(max_inflight)
+        self._sem = threading.BoundedSemaphore(max_inflight)
 
     def acquire(self):
         self._sem.acquire()
 
     def release(self):
-        self._sem.release()
+        try:
+            self._sem.release()
+        except ValueError:      # BoundedSemaphore: more releases than acquires
+            COUNTERS.inc("limiter.release_underflow")
 
     def __enter__(self):
         self.acquire()

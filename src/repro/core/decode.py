@@ -279,6 +279,61 @@ register_backend(DecodeBackend(
 _TILE_CANDIDATES = (64 << 10, 128 << 10, 256 << 10, 512 << 10, 1 << 20)
 _AUTOTUNE_CACHE: dict[str, int] = {}
 _AUTOTUNE_LOCK = threading.Lock()
+# backend name -> Event while its sweep is running: the lock guards only
+# the cache/pending dicts, never a measurement — one backend's
+# compile-heavy first sweep must not serialize every OTHER decoder's
+# first decode behind it (only same-backend callers wait, on the event)
+_AUTOTUNE_PENDING: dict[str, threading.Event] = {}
+
+
+def _autotune_sweep(backend, *, budget_s: float, chunk_bytes: int) -> int:
+    """The timed candidate sweep (no lock held). Each candidate gets ONE
+    untimed warmup call first — jit'd backends compile per tile shape,
+    and timing the first call would fold compile time into the rate
+    (and burn the whole budget on candidate 1 with a cold cache). Only
+    the timed run counts toward the rate and ``budget_s``."""
+    import numpy as np
+
+    from repro.core.crypto import aes
+
+    enc, sha, fused = backend.hooks()
+    rng = np.random.default_rng(0xA070)
+    candidates = [backend.tile_bytes] + [
+        c for c in _TILE_CANDIDATES if c != backend.tile_bytes]
+    best = backend.tile_bytes
+    best_rate = 0.0
+    spent = 0.0
+
+    def one_pass(cts, keys):
+        if fused is not None:
+            fused(cts, keys)
+        else:
+            if sha is not None:
+                sha(cts)
+            else:
+                import hashlib
+                for ct in cts:
+                    hashlib.sha256(ct).digest()
+            aes.ctr_keystream_many(keys, [len(ct) for ct in cts],
+                                   encrypt_many=enc)
+
+    for cand in candidates:
+        if spent > budget_s:    # checked BEFORE the warmup: an exhausted
+            break               # budget must not keep compiling candidates
+        nchunks = max(1, cand // chunk_bytes)
+        cts = [rng.integers(0, 256, chunk_bytes, np.uint8).tobytes()
+               for _ in range(nchunks)]
+        keys = [bytes(rng.integers(0, 256, 32, np.uint8))
+                for _ in range(nchunks)]
+        one_pass(cts, keys)     # warmup: compile + caches, untimed
+        t0 = time.perf_counter()
+        one_pass(cts, keys)
+        dt = time.perf_counter() - t0
+        rate = (nchunks * chunk_bytes) / max(dt, 1e-9)
+        if rate > best_rate:
+            best_rate, best = rate, cand
+        spent += dt
+    return best
 
 
 def autotune_tile_bytes(backend_name: str, *, budget_s: float = 0.25,
@@ -289,61 +344,49 @@ def autotune_tile_bytes(backend_name: str, *, budget_s: float = 0.25,
     per process. Each candidate decodes one synthetic tile of
     ``chunk_bytes`` chunks through the backend's real combined pass
     (the fused hook when present, else verify + keystream) and the
-    highest bytes/s wins.
+    highest bytes/s wins; an untimed warmup call per candidate keeps
+    jit compile time out of both the rate and the budget.
 
     The sweep is budgeted: candidates are tried starting from the
     backend's registered default, and once ``budget_s`` of measurement
-    has elapsed no further candidates start — so a compile-heavy first
-    call (jit'd backends) settles on the default instead of stalling a
-    restore. ``REPRO_NO_AUTOTUNE=1`` (env) disables the sweep;
-    explicit ``ServiceConfig``/``ReadPolicy`` integers bypass it
-    entirely (see ``BatchDecoder``). ``force=True`` re-measures."""
+    has elapsed no further candidates start. The sweep runs OUTSIDE
+    ``_AUTOTUNE_LOCK`` — concurrent callers for the SAME backend wait
+    on its pending event, while other backends sweep (or read their
+    cached tile) in parallel. ``REPRO_NO_AUTOTUNE=1`` (env) disables
+    the sweep; explicit ``ServiceConfig``/``ReadPolicy`` integers
+    bypass it entirely (see ``BatchDecoder``). ``force=True``
+    re-measures."""
     resolved = resolve_backend_name(backend_name)
     if resolved == "serial":
         return DEFAULT_MAX_BATCH_BYTES
     backend = _REGISTRY[resolved]
     if os.environ.get("REPRO_NO_AUTOTUNE"):
         return backend.tile_bytes
-    with _AUTOTUNE_LOCK:
-        if not force and resolved in _AUTOTUNE_CACHE:
-            return _AUTOTUNE_CACHE[resolved]
-        import numpy as np
-        from repro.core.crypto import aes
-        enc, sha, fused = backend.hooks()
-        rng = np.random.default_rng(0xA070)
-        candidates = [backend.tile_bytes] + [
-            c for c in _TILE_CANDIDATES if c != backend.tile_bytes]
-        best = backend.tile_bytes
-        best_rate = 0.0
-        spent = 0.0
-        for cand in candidates:
-            nchunks = max(1, cand // chunk_bytes)
-            cts = [rng.integers(0, 256, chunk_bytes, np.uint8).tobytes()
-                   for _ in range(nchunks)]
-            keys = [bytes(rng.integers(0, 256, 32, np.uint8))
-                    for _ in range(nchunks)]
-            t0 = time.perf_counter()
-            if fused is not None:
-                fused(cts, keys)
-            else:
-                if sha is not None:
-                    sha(cts)
-                else:
-                    import hashlib
-                    for ct in cts:
-                        hashlib.sha256(ct).digest()
-                aes.ctr_keystream_many(keys, [len(ct) for ct in cts],
-                                       encrypt_many=enc)
-            dt = time.perf_counter() - t0
-            rate = (nchunks * chunk_bytes) / max(dt, 1e-9)
-            if rate > best_rate:
-                best_rate, best = rate, cand
-            spent += dt
-            if spent > budget_s:
-                break
-        _AUTOTUNE_CACHE[resolved] = best
+    while True:
+        with _AUTOTUNE_LOCK:
+            if not force and resolved in _AUTOTUNE_CACHE:
+                return _AUTOTUNE_CACHE[resolved]
+            pending = _AUTOTUNE_PENDING.get(resolved)
+            if pending is None:
+                pending = _AUTOTUNE_PENDING[resolved] = threading.Event()
+                break               # this caller runs the sweep
+        pending.wait()              # same-backend sweep in flight
+        with _AUTOTUNE_LOCK:
+            done = _AUTOTUNE_CACHE.get(resolved)
+        if done is not None and not force:
+            return done
+        # the sweep failed (or force=True): loop and claim it ourselves
+    try:
+        best = _autotune_sweep(backend, budget_s=budget_s,
+                               chunk_bytes=chunk_bytes)
+        with _AUTOTUNE_LOCK:
+            _AUTOTUNE_CACHE[resolved] = best
         COUNTERS.inc("decode.autotuned_backends")
         return best
+    finally:
+        with _AUTOTUNE_LOCK:
+            _AUTOTUNE_PENDING.pop(resolved, None)
+        pending.set()
 
 
 class BatchDecoder:

@@ -46,10 +46,16 @@ class GenerationalGC:
         return self.active_roots[-1]
 
     def new_root(self) -> str:
-        """Create a new active root; the previous one is retired."""
+        """Create a new active root; the OLDEST active root is retired.
+
+        With staged-rollout roots (``add_active_root``) the list holds
+        several generations, oldest first — rolling the generation must
+        retire the oldest one, not the most recently staged root (which
+        would silently yank a rollout mid-flight while the old
+        generation lived on)."""
         nxt = f"R{next(self._counter)}"
         self.store.create_root(nxt)
-        prev = self.active_roots.pop() if self.active_roots else None
+        prev = self.active_roots.pop(0) if self.active_roots else None
         self.active_roots.append(nxt)
         if prev is not None:
             self.store._set_state(prev, "retired")

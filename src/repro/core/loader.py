@@ -123,15 +123,18 @@ class ImageReader:
     (an explicit `policy` wins over the legacy keywords)."""
 
     def __init__(self, manifest_blob: bytes, tenant_key: bytes, store,
-                 l1=None, l2=None, concurrency=None, root: str | None = None,
+                 l1=None, l2=None, peer=None, concurrency=None,
+                 root: str | None = None,
                  origin_delay_s: float = 0.0, decoder=None):
         # `root` = the root the manifest was FETCHED from; after GC
         # migration this differs from manifest.root_id (which names the
         # root the image was created in and is baked into the salt).
+        # `peer` = this worker's PeerClient into a shared PeerMesh
+        # (cache/peer.py), probed between L1 and L2.
         # `decoder` selects the batch-decode backend
         # (``core.decode.BatchDecoder``; "serial" is the per-chunk oracle).
         self._service = single_image_service(
-            store, l1=l1, l2=l2, fetch_limiter=concurrency,
+            store, l1=l1, l2=l2, peer=peer, fetch_limiter=concurrency,
             origin_delay_s=origin_delay_s)
         self._handle = self._service.open(manifest_blob, tenant_key,
                                           root=root, decoder=decoder)

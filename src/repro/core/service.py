@@ -191,6 +191,12 @@ class ServiceConfig:
     l2_hedge_quantile: float | None = None      # None = hedging off
     l2_infection_threshold: int = 0             # 0 = hot-key salting off
     l2_salt_count: int = 3                      # placement keys when salted
+    # peer-tier knobs (used by build_peer_mesh — the mesh spans MANY
+    # services, so a service never builds one itself; it receives a
+    # per-worker PeerClient via ImageService(peer=...))
+    peer_fanout: int = 4                # provisioning-tree arity
+    peer_deadline_s: float = 2.0        # bounded wait on a joined flight
+    peer_registration: str = "all"      # "all" | "origin" (see peer.py)
     root: str | None = None             # default root for open()
     default_policy: ReadPolicy = field(default_factory=ReadPolicy)
 
@@ -204,8 +210,8 @@ class ImageService:
     sessions. Construct once, ``open()`` per image."""
 
     def __init__(self, store, config: ServiceConfig | None = None, *,
-                 l1=None, l2=None, fetch_limiter=None, admission=None,
-                 counters=None):
+                 l1=None, l2=None, peer=None, fetch_limiter=None,
+                 admission=None, counters=None):
         cfg = config if config is not None else ServiceConfig()
         self.config = cfg
         self.store = store
@@ -239,6 +245,11 @@ class ImageService:
                 salt_count=cfg.l2_salt_count, **kw)
         else:
             self.l2 = None
+        # optional peer tier: this worker's PeerClient into a shared
+        # PeerMesh (cache/peer.py), probed between L1 and L2 by every
+        # reader this service builds. Injected, never self-built — a
+        # mesh spans many workers' services (see build_peer_mesh).
+        self.peer = peer
         if fetch_limiter is not None:
             self.fetch_limiter = fetch_limiter
         else:
@@ -429,7 +440,7 @@ class ImageService:
             scope = self.tenant_counters(tenant)
             reader = TieredReader(
                 manifest, self.store, root=root, l1=self.l1, l2=self.l2,
-                concurrency=self.fetch_limiter,
+                peer=self.peer, concurrency=self.fetch_limiter,
                 origin_delay_s=self.config.origin_delay_s,
                 decoder=decoder if decoder is not None
                 else self.decoder_for(self.config.default_policy),
@@ -563,12 +574,26 @@ class ImageHandle:
                                  l2_hedge=p.l2_hedge)
 
 
-def single_image_service(store, *, l1=None, l2=None, fetch_limiter=None,
+def single_image_service(store, *, l1=None, l2=None, peer=None,
+                         fetch_limiter=None,
                          origin_delay_s: float = 0.0) -> ImageService:
     """A private service with no self-built tiers or limiters — the
     substrate of the ``ImageReader`` deprecation shim and of one-shot
     scripts that inject their own tier objects."""
     cfg = ServiceConfig(l1_bytes=0, l2_nodes=0, fetch_concurrency=0,
                         max_coldstarts=0, origin_delay_s=origin_delay_s)
-    return ImageService(store, cfg, l1=l1, l2=l2,
+    return ImageService(store, cfg, l1=l1, l2=l2, peer=peer,
                         fetch_limiter=fetch_limiter)
+
+
+def build_peer_mesh(config: ServiceConfig, num_workers: int, *,
+                    seed: int = 0, transfer_hook=None):
+    """A ``PeerMesh`` sized from `config`'s peer knobs. The caller hands
+    ``mesh.client(i)`` to worker i's ``ImageService(peer=...)``; fault
+    injection goes through ``mesh.set_fault(i, FaultPlan...)`` exactly
+    like the L2's per-node plans."""
+    from repro.core.cache.peer import PeerMesh
+    return PeerMesh(num_workers, fanout=config.peer_fanout,
+                    deadline_s=config.peer_deadline_s,
+                    registration=config.peer_registration,
+                    seed=seed, transfer_hook=transfer_hook)

@@ -49,6 +49,29 @@ def main():
     ap.add_argument("--l2-salt-count", type=int, default=3,
                     help="placement keys an infected chunk is salted "
                          "into (reads round-robin, writes fan out)")
+    ap.add_argument("--peer-workers", type=int, default=0,
+                    help="peer provisioning mesh size: simulate this "
+                         "many workers sharing a FaaSNet-style peer "
+                         "tier and join it as worker 0, probed between "
+                         "L1 and L2 (0 = no peer tier)")
+    ap.add_argument("--peer-fanout", type=int, default=4,
+                    help="provisioning-tree arity: joiners of an "
+                         "in-flight chunk receive it through a tree "
+                         "this wide rooted at the fetching worker")
+    ap.add_argument("--peer-registration", default="all",
+                    choices=["all", "origin"],
+                    help="which workers advertise chunks in the peer "
+                         "directory: all = every acquirer (origin, L2, "
+                         "peer transfers — the tree compounds); origin "
+                         "= origin-fetchers only")
+    ap.add_argument("--peer-deadline-ms", type=float, default=2000.0,
+                    help="bounded wait on a joined peer flight before "
+                         "falling through to L2/origin")
+    ap.add_argument("--peer-fault", default=None, metavar="WID:KIND",
+                    help="peer fault injection, e.g. 3:crashed or "
+                         "1:blackholed — apply that FaultPlan to worker "
+                         "WID in the mesh (transfers from it fail and "
+                         "fall through)")
     ap.add_argument("--jax-compile-cache", default=None, metavar="DIR",
                     help="enable jax's persistent compilation cache in "
                          "DIR so jit'd decode kernels compile once per "
@@ -150,6 +173,9 @@ def main():
         max_coldstarts=args.max_coldstarts,
         fetch_concurrency=args.fetch_concurrency,
         decode_backend=args.decode_backend,
+        peer_fanout=args.peer_fanout,
+        peer_deadline_s=args.peer_deadline_ms / 1e3,
+        peer_registration=args.peer_registration,
         root=root,
         default_policy=policy,
     )
@@ -157,7 +183,19 @@ def main():
         svc_cfg.max_batch_bytes = args.max_batch_bytes
     if args.eager_min_bytes is not None:
         svc_cfg.eager_min_bytes = args.eager_min_bytes
-    service = ImageService(store, svc_cfg)
+    peer = None
+    if args.peer_workers > 0:
+        from repro.core.service import build_peer_mesh
+        mesh = build_peer_mesh(svc_cfg, args.peer_workers)
+        if args.peer_fault:
+            from repro.core.cache.distributed import FaultPlan
+            wid, kind = args.peer_fault.split(":", 1)
+            mesh.set_fault(int(wid), getattr(FaultPlan, kind)())
+        peer = mesh.client(0)
+        print(f"peer mesh: {args.peer_workers} workers, fanout "
+              f"{args.peer_fanout}, registration {args.peer_registration}"
+              f"{', fault ' + args.peer_fault if args.peer_fault else ''}")
+    service = ImageService(store, svc_cfg, peer=peer)
     t0 = time.time()
     engine, stats = cold_start(model, blob, key, service, policy=policy,
                                max_batch=4, max_len=64)

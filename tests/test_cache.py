@@ -71,6 +71,33 @@ class TestHashRing:
         loads = np.array([ring.loads[n] for n in ring.nodes])
         assert loads.max() <= 1.2 * loads.mean() + 2
 
+    def test_bounded_lookup_races_record_placement(self):
+        """Bounded lookups concurrent with record_placement must neither
+        blow up (dict mutated during iteration) nor lose placements.
+        Regression: lookup read self.loads unlocked; it now takes one
+        locked snapshot per lookup."""
+        import threading
+        ring = HashRing([f"n{i}" for i in range(6)], load_factor=1.2)
+        errs = []
+        placed = 200
+
+        def worker(wid):
+            try:
+                for i in range(placed):
+                    n = ring.lookup(f"w{wid}-k{i}", bound_loads=True)[0]
+                    ring.record_placement(n)
+            except Exception as e:              # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert sum(ring.loads.values()) == 8 * placed
+
 
 class TestDistributedCache:
     def test_put_get_roundtrip(self):

@@ -391,3 +391,111 @@ def test_cow_write_past_image_end_pages_zero_filled(tmp_path):
     # the RMW base fault preserved real tensor bytes on the same page
     tbytes = np.ascontiguousarray(tree["t"]).tobytes()
     assert dev.read(8192, 100) == tbytes[8192:8292]
+
+
+# ------------------------------------------------------- autotune sweep
+
+class _FakeHook:
+    """Counting fused hook: odd-numbered calls are the per-candidate
+    warmups, even-numbered calls the timed runs."""
+
+    def __init__(self, warmup_sleep=0.0, timed_sleep=0.0, gate=None):
+        self.calls = 0
+        self.warmup_sleep = warmup_sleep
+        self.timed_sleep = timed_sleep
+        self.gate = gate
+        self._lock = threading.Lock()
+
+    def __call__(self, cts, keys):
+        with self._lock:
+            self.calls += 1
+            n = self.calls
+        if self.gate is not None:
+            self.gate.wait(10)
+        time.sleep(self.warmup_sleep if n % 2 else self.timed_sleep)
+        return [b"\x00" * 32] * len(cts), [b""] * len(cts)
+
+
+@pytest.fixture
+def autotune_env():
+    """Temporarily register fake backends; restore autotune state after."""
+    import repro.core.decode as dec
+    saved_cache = dict(dec._AUTOTUNE_CACHE)
+    added = []
+
+    def register(name, hook, tile=64 << 10):
+        b = dec.DecodeBackend(name, "test", tile_bytes=tile)
+        b._hooks = (None, None, hook)
+        dec._REGISTRY[name] = b
+        added.append(name)
+        return b
+
+    yield register
+    for name in added:
+        dec._REGISTRY.pop(name, None)
+        dec._AUTOTUNE_PENDING.pop(name, None)
+    dec._AUTOTUNE_CACHE.clear()
+    dec._AUTOTUNE_CACHE.update(saved_cache)
+
+
+def test_autotune_warmup_untimed_and_unbudgeted(autotune_env, monkeypatch):
+    """Every candidate gets warmup + timed call; slow warmups (stand-in
+    for jit compiles) must not burn the measurement budget."""
+    import repro.core.decode as dec
+    monkeypatch.delenv("REPRO_NO_AUTOTUNE", raising=False)
+    hook = _FakeHook(warmup_sleep=0.03, timed_sleep=0.0)
+    autotune_env("t-warm", hook)
+    n_cands = 1 + sum(c != (64 << 10) for c in dec._TILE_CANDIDATES)
+    # budget far below total warmup time: if warmups counted, the sweep
+    # would stop after candidate 1 (0.03 > 0.01)
+    dec.autotune_tile_bytes("t-warm", budget_s=0.01)
+    assert hook.calls == 2 * n_cands
+
+
+def test_autotune_budget_stops_timed_runs(autotune_env, monkeypatch):
+    """A candidate whose predecessors exhausted the budget never starts
+    (not even its warmup)."""
+    import repro.core.decode as dec
+    monkeypatch.delenv("REPRO_NO_AUTOTUNE", raising=False)
+    hook = _FakeHook(warmup_sleep=0.0, timed_sleep=0.05)
+    autotune_env("t-budget", hook)
+    dec.autotune_tile_bytes("t-budget", budget_s=0.01)
+    assert hook.calls == 2                  # candidate 1 only
+
+
+def test_autotune_sweep_does_not_block_other_backends(autotune_env,
+                                                      monkeypatch):
+    """The sweep runs outside _AUTOTUNE_LOCK: while one backend's sweep
+    is stalled (compile stand-in), another backend autotunes; concurrent
+    same-backend callers share ONE sweep."""
+    import repro.core.decode as dec
+    monkeypatch.delenv("REPRO_NO_AUTOTUNE", raising=False)
+    gate = threading.Event()
+    slow = _FakeHook(gate=gate)
+    fast = _FakeHook()
+    autotune_env("t-slow", slow)
+    autotune_env("t-fast", fast)
+
+    results = {}
+
+    def tune(name):
+        results[name] = dec.autotune_tile_bytes(name, budget_s=0.01)
+
+    stalled = [threading.Thread(target=tune, args=("t-slow",))
+               for _ in range(3)]
+    for t in stalled:
+        t.start()
+    deadline = time.time() + 5
+    while slow.calls == 0 and time.time() < deadline:
+        time.sleep(0.002)
+    assert slow.calls == 1                  # one sweep despite 3 callers
+    # with t-slow's sweep parked, t-fast must still complete
+    t0 = time.time()
+    tune("t-fast")
+    assert time.time() - t0 < 2
+    assert fast.calls >= 2
+    gate.set()
+    for t in stalled:
+        t.join(10)
+    assert slow.calls >= 2                  # the one sweep ran to timing
+    assert "t-slow" in results and results["t-slow"] > 0

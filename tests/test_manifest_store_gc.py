@@ -128,6 +128,23 @@ class TestGC:
         assert gc.delete_expired("R1") is False   # deletion frozen
         assert store.has_manifest("R1", "img")
 
+    def test_new_root_retires_oldest_active_root(self, tmp_path):
+        """Rolling the generation with staged-rollout roots active must
+        retire the OLDEST active root; the staged (newest) root stays
+        active. Regression: new_root() used to pop the newest."""
+        store = make_store(tmp_path)
+        gc = GenerationalGC(store)
+        staged = gc.add_active_root()           # ["R1", staged]
+        rolled = gc.new_root()                  # retires R1, not `staged`
+        assert gc.active_roots == [staged, rolled]
+        assert gc.retired == ["R1"]
+        assert store.root_state("R1") == "retired"
+        assert store.root_state(staged) == "active"
+        # rolling again retires the staged root (now the oldest)
+        rolled2 = gc.new_root()
+        assert gc.active_roots == [rolled, rolled2]
+        assert gc.retired == ["R1", staged]
+
     def test_multiple_active_roots(self, tmp_path):
         store = make_store(tmp_path)
         gc = GenerationalGC(store)

@@ -1,0 +1,321 @@
+"""Peer-to-peer provisioning tier: mesh dedup semantics (lead / join /
+promote / abandon), FaaSNet tree repair under faults, registration
+policies, reader integration (probe order L1 -> peer -> L2 -> origin),
+and byte identity to the serial oracle with peers crashing mid-flight."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cache.distributed import FaultPlan
+from repro.core.cache.peer import PeerMesh
+from repro.core.loader import ImageReader
+from repro.core.service import ReadPolicy, ServiceConfig, build_peer_mesh
+from repro.core.telemetry import COUNTERS
+
+from test_batched_read import CS, KEY, CountingStore, image_truth, make_env
+
+CT = b"\xabCIPHERTEXT" * 37
+
+
+# ------------------------------------------------------------ mesh flows
+
+def test_lead_then_direct_hit():
+    mesh = PeerMesh(3)
+    c0, c1 = mesh.client(0), mesh.client(1)
+    lat, got = c0.get_chunk("n1", len(CT))
+    assert got is None                      # first miss: c0 leads
+    c0.put_chunk("n1", CT, source="origin")
+    lat, got = c1.get_chunk("n1", len(CT))
+    assert got == CT and lat > 0
+    # policy "all": the receiving worker becomes a holder too
+    assert set(mesh.holders("n1")) == {0, 1}
+
+
+def test_registration_origin_keeps_directory_minimal():
+    mesh = PeerMesh(3, registration="origin")
+    c0, c1 = mesh.client(0), mesh.client(1)
+    assert c0.get_chunk("n1", len(CT))[1] is None
+    c0.put_chunk("n1", CT, source="origin")
+    assert c1.get_chunk("n1", len(CT))[1] == CT
+    assert mesh.holders("n1") == [0]        # c1 served, not advertised
+    # an L2-sourced publish is not advertised either...
+    assert c1.get_chunk("n2", len(CT))[1] is None
+    c1.put_chunk("n2", CT, source="l2")
+    assert mesh.holders("n2") == []
+    # ...but the serving copy exists: flight joiners would be served
+    assert mesh.workers[1].chunks["n2"] == CT
+
+
+def test_joiners_receive_through_tree():
+    mesh = PeerMesh(10, fanout=2)
+    c0 = mesh.client(0)
+    assert c0.get_chunk("n", len(CT))[1] is None    # c0 leads
+    results = {}
+
+    def join(wid):
+        results[wid] = mesh.client(wid).get_chunk("n", len(CT))
+
+    threads = [threading.Thread(target=join, args=(w,)) for w in range(1, 10)]
+    for t in threads:
+        t.start()
+    deadline = time.time() + 5              # all 9 joined the flight
+    while time.time() < deadline:
+        with mesh._lock:
+            if len(mesh.flights["n"].joiners) == 9:
+                break
+        time.sleep(0.002)
+    before_tree = COUNTERS.get("peer.tree_hits")
+    before_xfer = COUNTERS.get("peer.transfers")
+    c0.put_chunk("n", CT, source="origin")
+    for t in threads:
+        t.join(10)
+    assert all(got == CT for _lat, got in results.values())
+    # every joiner was served by a peer transfer; first-layer joiners
+    # (parent = the leader, who registered before resolving) always come
+    # through the tree — deeper ones may race their parent's own receipt
+    # and fall back to a direct transfer, still peer-served
+    assert COUNTERS.get("peer.transfers") - before_xfer >= 9
+    assert COUNTERS.get("peer.tree_hits") - before_tree >= 1
+    assert set(mesh.holders("n")) == set(range(10))
+
+
+def test_abandon_promotes_first_joiner():
+    mesh = PeerMesh(3)
+    c0, c1 = mesh.client(0), mesh.client(1)
+    assert c0.get_chunk("n", len(CT))[1] is None
+    out = {}
+
+    def join():
+        out["r"] = c1.get_chunk("n", len(CT))
+
+    t = threading.Thread(target=join)
+    t.start()
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        with mesh._lock:
+            if mesh.flights["n"].joiners:
+                break
+        time.sleep(0.002)
+    before = COUNTERS.get("peer.promotions")
+    c0.abandon("n")                         # c0's lower-tier fetch failed
+    t.join(10)
+    assert out["r"][1] is None              # c1 now leads: falls through
+    assert COUNTERS.get("peer.promotions") - before == 1
+    c1.put_chunk("n", CT, source="origin")  # ...and publishes
+    assert mesh.client(2).get_chunk("n", len(CT))[1] == CT
+
+
+def test_abandon_without_joiners_clears_flight():
+    mesh = PeerMesh(2)
+    c0 = mesh.client(0)
+    assert c0.get_chunk("n", len(CT))[1] is None
+    c0.abandon("n")
+    assert mesh.flights == {}
+    assert c0.get_chunk("n", len(CT))[1] is None    # fresh lead, no wedge
+    c0.abandon("n")
+    # abandoning a flight led by someone else is a no-op
+    assert mesh.client(1).get_chunk("n", len(CT))[1] is None
+    c0.abandon("n")
+    with mesh._lock:
+        assert mesh.flights["n"].leader == 1
+
+
+def test_crashed_holder_falls_through():
+    mesh = PeerMesh(3)
+    c0, c1 = mesh.client(0), mesh.client(1)
+    assert c0.get_chunk("n", len(CT))[1] is None
+    c0.put_chunk("n", CT, source="origin")
+    mesh.set_fault(0, FaultPlan.crashed())
+    before = COUNTERS.get("peer.dead_peer_fallthroughs")
+    lat, got = c1.get_chunk("n", len(CT))
+    assert got is None                      # dead holder: miss, c1 leads
+    assert COUNTERS.get("peer.dead_peer_fallthroughs") > before
+    c1.put_chunk("n", CT, source="origin")
+    assert mesh.client(2).get_chunk("n", len(CT))[1] == CT  # healthy holder
+
+
+def test_tree_repair_skips_dead_parent():
+    """fanout=1 chain: leader <- j1 <- j2. Crashing j1 after resolve must
+    reconnect j2 to the leader (tree repair), not orphan it."""
+    mesh = PeerMesh(3, fanout=1)
+    c0 = mesh.client(0)
+    assert c0.get_chunk("n", len(CT))[1] is None
+    started, results = [], {}
+
+    def join(wid):
+        started.append(wid)
+        results[wid] = mesh.client(wid).get_chunk("n", len(CT))
+
+    t1 = threading.Thread(target=join, args=(1,))
+    t1.start()
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        with mesh._lock:
+            if mesh.flights["n"].joiners == [1]:
+                break
+        time.sleep(0.002)
+    t2 = threading.Thread(target=join, args=(2,))
+    t2.start()
+    while time.time() < deadline:
+        with mesh._lock:
+            if mesh.flights["n"].joiners == [1, 2]:
+                break
+        time.sleep(0.002)
+    mesh.set_fault(1, FaultPlan.crashed())  # j2's parent dies pre-resolve
+    before = COUNTERS.get("peer.tree_repairs")
+    c0.put_chunk("n", CT, source="origin")
+    t1.join(10)
+    t2.join(10)
+    assert results[2][1] == CT              # served via the leader
+    assert COUNTERS.get("peer.tree_repairs") - before >= 1
+
+
+def test_invalidate_drops_all_copies():
+    mesh = PeerMesh(3)
+    c0, c1 = mesh.client(0), mesh.client(1)
+    assert c0.get_chunk("n", len(CT))[1] is None
+    c0.put_chunk("n", CT, source="origin")
+    assert c1.get_chunk("n", len(CT))[1] == CT
+    c1.invalidate("n")
+    assert mesh.holders("n") == []
+    assert all("n" not in w.chunks for w in mesh.workers)
+    assert mesh.client(2).get_chunk("n", len(CT))[1] is None
+
+
+def test_probe_chunks_leads_joins_and_inline_hits():
+    mesh = PeerMesh(4)
+    c0, c1, c2 = mesh.client(0), mesh.client(1), mesh.client(2)
+    # "held": resolved earlier; "flying": in flight led by c0; "fresh": new
+    assert c0.get_chunk("held", len(CT))[1] is None
+    c0.put_chunk("held", CT, source="origin")
+    assert c0.get_chunk("flying", len(CT))[1] is None
+    ready = {}
+    leads, futs = c1.probe_chunks(["held", "flying", "fresh"], len(CT),
+                                  lambda n, lat, ct: ready.setdefault(n, ct))
+    assert leads == ["fresh"]               # c1 must fetch this one itself
+    assert ready["held"] == CT              # inline direct hit
+    assert set(futs) == {"flying"}
+    c0.put_chunk("flying", CT + b"2", source="origin")
+    lat, got = futs["flying"].result(timeout=10)
+    assert got == CT + b"2" and ready["flying"] == CT + b"2"
+    # an abandoned lead with no joiners resolves probes as misses
+    leads2, futs2 = c2.probe_chunks(["fresh"], len(CT),
+                                    lambda n, lat, ct: None)
+    assert leads2 == [] and set(futs2) == {"fresh"}
+    c1.abandon("fresh")                     # promotes c2's probe waiter
+    lat, got = futs2["fresh"].result(timeout=10)
+    assert got is None                      # c2 now leads via the future
+
+
+def test_build_peer_mesh_from_config():
+    cfg = ServiceConfig(l2_nodes=0, peer_fanout=7, peer_deadline_s=0.5,
+                        peer_registration="origin")
+    mesh = build_peer_mesh(cfg, 5, seed=3)
+    assert len(mesh.workers) == 5
+    assert mesh.fanout == 7 and mesh.deadline_s == 0.5
+    assert mesh.registration == "origin"
+    with pytest.raises(ValueError):
+        PeerMesh(2, registration="bogus")
+
+
+# ----------------------------------------------- reader integration
+
+def _fleet_readers(store, blob, n, **mesh_kw):
+    mesh = PeerMesh(n, **mesh_kw)
+    return mesh, [ImageReader(blob, KEY, store, peer=mesh.client(i))
+                  for i in range(n)]
+
+
+def test_second_worker_restores_peer_only(tmp_path):
+    """Probe order: once worker 0 restored, worker 1's restore is served
+    entirely by the peer tier — zero new origin GETs."""
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore)
+    mesh, readers = _fleet_readers(store, blob, 2)
+    truth = image_truth(tree)
+    pol = ReadPolicy(mode="streamed", parallelism=2)
+    r0 = readers[0].restore_tree(policy=pol)
+    gets_after_first = store.gets
+    before_hits = COUNTERS.get("read.peer_hits")
+    r1 = readers[1].restore_tree(policy=pol)
+    assert store.gets == gets_after_first   # no origin traffic at all
+    assert COUNTERS.get("read.peer_hits") > before_hits
+    for k in tree:
+        assert np.array_equal(r1[k], r0[k])
+    assert image_truth(r1) == truth
+
+
+def test_storm_dedups_origin_and_matches_oracle(tmp_path):
+    """A simultaneous 6-worker storm: origin GETs stay ~unique-chunk
+    count (each chunk fetched once, provisioned peer-to-peer), bytes
+    identical to the serial oracle."""
+    store, gc, tree, blob, stats = make_env(tmp_path, store_cls=CountingStore)
+    oracle = ImageReader(blob, KEY, store).restore_tree(
+        policy=ReadPolicy(mode="serial"))
+    gets0 = store.gets
+    n = 6
+    mesh, readers = _fleet_readers(store, blob, n)
+    barrier = threading.Barrier(n)
+    out, errs = {}, []
+
+    def work(i):
+        try:
+            barrier.wait(timeout=30)
+            out[i] = readers[i].restore_tree(
+                policy=ReadPolicy(mode="streamed", parallelism=2))
+        except Exception as e:              # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errs, errs
+    unique = stats.unique_chunks
+    assert store.gets - gets0 <= 2 * unique     # storm dedup held
+    for i in range(n):
+        for k in tree:
+            assert np.array_equal(out[i][k], oracle[k]), (i, k)
+
+
+def test_crashed_peer_mid_storm_stays_byte_identical(tmp_path):
+    """Kill a worker after its first peer transfer: every restore still
+    matches the oracle (fall-through, never corruption)."""
+    store, gc, tree, blob, _ = make_env(tmp_path, store_cls=CountingStore)
+    oracle = ImageReader(blob, KEY, store).restore_tree(
+        policy=ReadPolicy(mode="serial"))
+    n = 5
+    mesh = PeerMesh(n)
+    crashed = []
+
+    def crash_src(name, src_wid, dst_wid):
+        if not crashed:
+            crashed.append(src_wid)
+            mesh.set_fault(src_wid, FaultPlan.crashed())
+
+    mesh.transfer_hook = crash_src
+    readers = [ImageReader(blob, KEY, store, peer=mesh.client(i))
+               for i in range(n)]
+    barrier = threading.Barrier(n)
+    out, errs = {}, []
+
+    def work(i):
+        try:
+            barrier.wait(timeout=30)
+            out[i] = readers[i].restore_tree(
+                policy=ReadPolicy(mode="streamed", parallelism=2))
+        except Exception as e:              # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errs, errs
+    assert crashed                           # the hook actually fired
+    for i in range(n):
+        for k in tree:
+            assert np.array_equal(out[i][k], oracle[k]), (i, k)

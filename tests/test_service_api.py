@@ -648,3 +648,59 @@ def test_close_racing_inflight_streamed_read_still_byte_identical(tmp_path):
     assert not errs, errs
     assert np.array_equal(out[0]["w"], np.asarray(tree["w"]))
     assert svc._sessions == {} and svc._decoders == {}
+
+
+# ----------------------------------------------------- limiter underflow
+
+def test_rejecting_limiter_release_clamps_at_zero():
+    """Over-release must not go negative and widen the admission gate;
+    it ticks limiter.release_underflow instead."""
+    from repro.core.concurrency import RejectingLimiter
+
+    lim = RejectingLimiter(2)
+    assert lim.try_acquire() and lim.try_acquire()
+    assert not lim.try_acquire()                    # full
+    lim.release()
+    lim.release()
+    before = COUNTERS.get("limiter.release_underflow")
+    lim.release()                                   # spurious
+    lim.release()                                   # spurious
+    assert COUNTERS.get("limiter.release_underflow") == before + 2
+    assert lim.inflight == 0
+    # capacity unchanged: exactly 2 admits, the 3rd rejects
+    assert lim.try_acquire() and lim.try_acquire()
+    assert not lim.try_acquire()
+    lim.release()
+    lim.release()
+
+
+def test_blocking_limiter_release_clamps_at_cap():
+    """Extra releases must not mint origin-fetch permits beyond
+    max_inflight; they tick limiter.release_underflow."""
+    from repro.core.concurrency import BlockingLimiter
+
+    lim = BlockingLimiter(1)
+    with lim:
+        pass
+    before = COUNTERS.get("limiter.release_underflow")
+    lim.release()                                   # spurious
+    assert COUNTERS.get("limiter.release_underflow") == before + 1
+    # still exactly ONE permit: a second concurrent acquire blocks
+    lim.acquire()
+    blocked = threading.Event()
+    acquired = threading.Event()
+
+    def second():
+        blocked.set()
+        lim.acquire()
+        acquired.set()
+
+    t = threading.Thread(target=second)
+    t.start()
+    blocked.wait(5)
+    time.sleep(0.05)
+    assert not acquired.is_set()                    # no minted permit
+    lim.release()
+    assert acquired.wait(5)
+    lim.release()
+    t.join(5)
