@@ -1,5 +1,6 @@
 # Offline-friendly entry points (no network-dependent packages).
-.PHONY: test verify bench bench-read bench-decode bench-fault bench-storm
+.PHONY: test verify bench bench-read bench-decode bench-fault bench-storm \
+	bench-publish
 
 test: verify     ## alias for verify
 
@@ -20,3 +21,6 @@ bench-fault:     ## §4 resilience: mid-restore faults, hedged GETs, 100-tenant 
 
 bench-storm:     ## 1->100 worker cold-start storm through the peer tier -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py coldstart_storm
+
+bench-publish:   ## batched write path: speedup, ckpt dedup, GC roll mid-traffic -> BENCH_e2e.json
+	PYTHONPATH=src:. python benchmarks/run.py publish_pipeline

@@ -55,3 +55,55 @@ def run() -> list:
                      value=float(xs[len(xs) // 2]),
                      derived=f"ecdf_points={list(zip(xs[::12].round(4).tolist(), ys[::12].round(3).tolist()))}"))
     return rows
+
+
+def smoke(n_functions: int = 80) -> None:
+    """Fast tier-1 gate (scripts/test.sh): the Fig-5 creation-time
+    statistics stay in the paper's ballpark — the re-upload fraction
+    near the workload's 0.8 (paper: ~80% of uploads are byte-identical
+    re-uploads) and the mean unique-chunk fraction of the rest well
+    under 0.25 (paper: 0.043; smaller populations run higher because
+    the first all-unique lineage heads weigh more). A regression here
+    means creation-time dedup broke (salting, chunk naming, zero
+    elision or PUT-if-absent)."""
+    import sys
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-dedup-smoke-"))
+    gc = GenerationalGC(store)
+    pop = build_population(store, gc.active, n_functions=n_functions,
+                           n_bases=4)
+    reuploads = sum(1 for s in pop.stats if s.unique_chunks == 0)
+    fracs = [s.unique_fraction for s in pop.stats if s.unique_chunks > 0]
+    re_frac = reuploads / len(pop.stats)
+    mean = float(np.mean(fracs))
+    failures = []
+    if not 0.55 <= re_frac <= 0.95:
+        failures.append(
+            f"re-upload fraction {re_frac:.2f} out of [0.55, 0.95] "
+            f"(workload reupload_frac=0.8, paper ~0.80)")
+    if mean >= 0.25:
+        failures.append(
+            f"mean unique-chunk fraction {mean:.3f} >= 0.25 "
+            f"(paper 0.043) — creation-time dedup regressed")
+    if failures:
+        print("DEDUP STATISTICS SMOKE REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print(f"DEDUP STATISTICS OK: {n_functions} uploads, re-upload fraction "
+          f"{re_frac:.2f} (paper ~0.80), mean unique-chunk fraction "
+          f"{mean:.3f} (paper 0.043)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast Fig-5 dedup-statistics gate (tier-1)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['value']:.6g},\"{row['derived']}\"")

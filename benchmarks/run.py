@@ -17,6 +17,8 @@ BENCHES = [
     ("decode_kernels", "per-backend keystream/verify GB/s (registry)"),
     ("coldstart_storm", "peer provisioning tier: 1->100 worker "
                         "cold-start storm"),
+    ("publish_pipeline", "batched write path: speedup vs serial oracle, "
+                         "checkpoint dedup, GC roll under live restores"),
     ("parity_kernel", "Listings 1/2 parity vectorization"),
     ("coldstart", "cold-start scale-out"),
     ("roofline_report", "dry-run roofline summary"),

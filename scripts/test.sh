@@ -69,6 +69,25 @@ if [ "$#" -eq 0 ]; then
         echo "FAIL: cold-start storm smoke regression (see above)" >&2
         exit 1
     fi
+    # publish-pipeline gate: batched write path byte-identical to the
+    # serial create_image oracle and >= 2x its wall (full bench targets
+    # 3x), checkpoint dedup falling with encrypt-skips, and a GC
+    # generation roll under a frozen live restore honoring the pin/alarm
+    # protocol
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/publish_pipeline.py --smoke; then
+        echo "FAIL: publish pipeline smoke regression (see above)" >&2
+        exit 1
+    fi
+    # dedup-statistics gate: the Fig-5 creation-time numbers stay in the
+    # paper's ballpark (re-upload fraction, unique-chunk mean)
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/dedup_cdf.py --smoke; then
+        echo "FAIL: dedup statistics smoke regression (see above)" >&2
+        exit 1
+    fi
     exit 0
 fi
 exec python -m pytest -x -q "$@"

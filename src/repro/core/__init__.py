@@ -4,10 +4,15 @@ generational GC — serving as this framework's checkpoint/weight
 distribution layer. See DESIGN.md for the mapping."""
 from repro.core.blockdev import CowBlockDevice, TieredReader  # noqa: F401
 from repro.core.erasure import ErasureCoder  # noqa: F401
-from repro.core.gc import GenerationalGC  # noqa: F401
+from repro.core.gc import (  # noqa: F401
+    GenerationalGC,
+    RefcountIndex,
+    RootPinRegistry,
+)
 from repro.core.layout import CHUNK_SIZE, build_layout  # noqa: F401
 from repro.core.loader import ImageReader, create_image  # noqa: F401
 from repro.core.manifest import Manifest, open_manifest, read_public, seal  # noqa: F401
+from repro.core.publish import PublishPipeline  # noqa: F401
 from repro.core.service import (  # noqa: F401
     ColdStartRejected,
     ImageHandle,

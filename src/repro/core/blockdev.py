@@ -74,6 +74,7 @@ read-modify-write base-page faults through one ``read_many`` too.
 from __future__ import annotations
 
 import contextlib
+import functools
 import heapq
 import inspect
 import itertools
@@ -95,6 +96,17 @@ ORIGIN_LAT_S = 36e-3          # paper: S3 origin median 36ms (simulated)
 L1_PROBE_S = 2e-6
 DEFAULT_PARALLELISM = 8
 DEFAULT_QUEUE_DEPTH = 32      # streamed hand-off queue bound (chunks)
+
+
+def _pinned(fn):
+    """Hold the reader's GC root pin for the duration of a public read
+    entry point (no-op without a registry; nested calls just bump the
+    count). See ``TieredReader._pin``."""
+    @functools.wraps(fn)
+    def wrapped(self, *args, **kwargs):
+        with self._pin():
+            return fn(self, *args, **kwargs)
+    return wrapped
 
 
 def pipelined_latency(lats, lanes: int) -> float:
@@ -169,7 +181,7 @@ class TieredReader:
                  l1=None, l2=None, concurrency=None,
                  origin_delay_s: float = 0.0, decoder: BatchDecoder | None = None,
                  counters=None, flights: FlightTable | None = None,
-                 peer=None):
+                 peer=None, pins=None):
         self.m = manifest
         self.store = store
         self.root = root or manifest.root_id
@@ -187,6 +199,11 @@ class TieredReader:
         # attributes this reader's fetch activity without forking the
         # global totals
         self.counters = counters if counters is not None else COUNTERS
+        # `pins`: a ``gc.RootPinRegistry`` — every public read entry
+        # point pins ``self.root`` for its duration, so a concurrent GC
+        # generation roll cannot delete/sweep the root mid-restore
+        # (epoch/pin protocol, §3.4)
+        self.pins = pins
         self.read_lat = LatencyRecorder("e2e.read")
         self.batch_lat = LatencyRecorder("e2e.read_batch")
         self.last_batch: dict = {}
@@ -205,6 +222,15 @@ class TieredReader:
         l2_params = inspect.signature(l2_get).parameters if l2_get else {}
         self._l2_streams = "on_ready" in l2_params
         self._l2_hedges = "hedge" in l2_params
+
+    def _pin(self):
+        """Pin this reader's root for the duration of a read (no-op
+        without a registry). Re-entrant by construction: pins are
+        counted, so a public method calling another public method just
+        nests."""
+        if self.pins is None:
+            return contextlib.nullcontext()
+        return self.pins.pin(self.root)
 
     # ------------------------------------------------------------- chunks
     def _fetch_cipher(self, ref) -> tuple[bytes, float]:
@@ -287,6 +313,7 @@ class TieredReader:
                 self._flights.pop((self.root, ref.name), None)
             flight.event.set()
 
+    @_pinned
     def fetch_chunk(self, index: int) -> bytes:
         """Plaintext of chunk `index`, via the cache hierarchy (serial)."""
         ref = self._refs[index]
@@ -309,6 +336,7 @@ class TieredReader:
         return plain
 
     # ------------------------------------------------- stage F: fetch I/O
+    @_pinned
     def fetch_ciphertexts(self, indices,
                           parallelism: int = DEFAULT_PARALLELISM,
                           sink: BoundedQueue | None = None,
@@ -618,6 +646,7 @@ class TieredReader:
                 for inv in invalidators:
                     inv(name)
 
+    @_pinned
     def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
                      materialize: bool = True, streamed: bool = False,
                      queue_depth: int = DEFAULT_QUEUE_DEPTH,
@@ -742,6 +771,7 @@ class TieredReader:
         }
         return {}
 
+    @_pinned
     def fetch_chunks_streamed(self, indices,
                               parallelism: int = DEFAULT_PARALLELISM,
                               queue_depth: int = DEFAULT_QUEUE_DEPTH,
@@ -859,10 +889,12 @@ class TieredReader:
             pos += take
         return bytes(out)
 
+    @_pinned
     def read(self, offset: int, length: int) -> bytes:
         """Serial read: chunks fetched one at a time, in order."""
         return self._assemble(offset, length, {})
 
+    @_pinned
     def read_many(self, ranges, parallelism: int = DEFAULT_PARALLELISM,
                   streamed: bool = False,
                   queue_depth: int = DEFAULT_QUEUE_DEPTH,

@@ -86,6 +86,42 @@ def expand_key(key: bytes) -> np.ndarray:
     return np.array(w, dtype=np.uint32).reshape(rounds + 1, 4)
 
 
+_SBOX32 = _SBOX.astype(np.uint32)
+
+
+def expand_keys_many(keys: list) -> np.ndarray:
+    """Round-key schedules for N same-length keys at once:
+    (N, rounds+1, 4) uint32. The recurrence is sequential in the word
+    index but vectorizes across keys — ~52 numpy steps replace ~52·N
+    python steps, the dominant fixed cost of a many-distinct-key CTR
+    batch (every convergent chunk has its own key)."""
+    n = len(keys)
+    nk = len(keys[0]) // 4
+    assert nk in (4, 8), "AES-128 or AES-256 only"
+    rounds = {4: 10, 8: 14}[nk]
+    nwords = 4 * (rounds + 1)
+    kb = np.frombuffer(b"".join(keys), np.uint8).reshape(n, nk, 4)
+    kb = kb.astype(np.uint32)
+    w = np.zeros((n, nwords), np.uint32)
+    w[:, :nk] = (kb[:, :, 0] << 24) | (kb[:, :, 1] << 16) \
+        | (kb[:, :, 2] << 8) | kb[:, :, 3]
+    s = _SBOX32
+
+    def sub(x):
+        return ((s[(x >> 24) & 0xFF] << 24) | (s[(x >> 16) & 0xFF] << 16)
+                | (s[(x >> 8) & 0xFF] << 8) | s[x & 0xFF])
+
+    for i in range(nk, nwords):
+        t = w[:, i - 1]
+        if i % nk == 0:
+            t = sub((t << np.uint32(8)) | (t >> np.uint32(24))) \
+                ^ np.uint32((_RCON[i // nk - 1] << 24) & 0xFFFFFFFF)
+        elif nk == 8 and i % nk == 4:
+            t = sub(t)
+        w[:, i] = w[:, i - nk] ^ t
+    return w.reshape(n, rounds + 1, 4)
+
+
 def encrypt_blocks(blocks: np.ndarray, round_keys: np.ndarray) -> np.ndarray:
     """Encrypt N AES blocks at once. blocks: (N, 16) uint8 -> (N, 16) uint8.
 
@@ -217,25 +253,19 @@ def ctr_keystream_many(keys: list, nbytes: list, ivs: list | None = None,
         if nb:
             _counter_blocks(iv, nb, ctr[off:off + nb])
         off += nb
-    # distinct chunks usually have distinct convergent keys, but dedup the
-    # (pure-python) expansion anyway for the identical-plaintext case
-    expanded: dict[bytes, np.ndarray] = {}
-    per_key = []
-    for k in keys:
-        rk = expanded.get(k)
-        if rk is None:
-            rk = expanded[k] = expand_key(k)
-        per_key.append(rk)
+    # every convergent chunk has its own key: expand all N schedules in
+    # one vectorized pass instead of N pure-python loops
+    per_key = expand_keys_many(keys)
     if encrypt_many is not None and getattr(encrypt_many, "per_chunk_rks",
                                             False):
         # run-length protocol: ship ONE schedule per chunk plus block
         # counts; the backend broadcasts on device (no host np.repeat
         # of 60-word schedules per 16-byte block)
         ks = np.asarray(encrypt_many(
-            ctr, np.stack(per_key),
+            ctr, per_key,
             counts=np.asarray(nblocks, np.int64))).reshape(total * 16)
     else:
-        rks = np.repeat(np.stack(per_key), nblocks, axis=0)
+        rks = np.repeat(per_key, nblocks, axis=0)
         fn = encrypt_many or encrypt_blocks
         ks = np.asarray(fn(ctr, rks)).reshape(total * 16)
     out = []

@@ -15,6 +15,8 @@ from __future__ import annotations
 import hashlib
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.core.crypto import aes
 from repro.core.crypto.sha256v import sha256_many
 
@@ -41,6 +43,52 @@ def encrypt_chunk(plaintext: bytes, salt: bytes) -> EncryptedChunk:
     digest = hashlib.sha256(ct).digest()
     return EncryptedChunk(name=digest.hex(), ciphertext=ct, key=key,
                           sha256=digest)
+
+
+def derive_keys(plaintexts: list, salt: bytes, *,
+                sha_backend: str = "hashlib", sha_many=None) -> list:
+    """Batched convergent key derivation: SHA256(salt ‖ pt) for N chunks
+    in one digest pass (``sha256v.sha256_many``; a ``sha_many`` callable
+    — e.g. the Pallas lockstep kernel — overrides it).
+
+    Keys alone are enough to *name* a previously-seen chunk (one key ↔
+    one plaintext ↔ one ciphertext ↔ one name under a fixed salt), which
+    is what lets the publish pipeline skip encrypting dedup'd bytes
+    entirely (``core.publish.NameIndex``)."""
+    msgs = [salt + pt for pt in plaintexts]
+    if sha_many is not None:
+        return sha_many(msgs)
+    return sha256_many(msgs, backend=sha_backend)
+
+
+def encrypt_chunks(plaintexts: list, salt: bytes, *, keys: list | None = None,
+                   sha_backend: str = "hashlib", encrypt_many=None,
+                   sha_many=None) -> list:
+    """Batched convergent encryption of N chunks — the FORWARD direction
+    of ``decrypt_chunks``, through the same vectorized kernels: one
+    batched SHA pass derives the keys (skipped when `keys` carries
+    pre-derived ones from the publish pipeline's dedup probe), one
+    batched AES-CTR block pass produces every keystream
+    (``aes.ctr_keystream_many``; ``encrypt_many`` plugs in a
+    ``repro.kernels.aes`` variant), and one more batched SHA pass names
+    the ciphertexts. Returns ``EncryptedChunk`` per input, byte-for-byte
+    identical to the serial ``encrypt_chunk`` oracle."""
+    pts = list(plaintexts)
+    if not pts:
+        return []
+    if keys is None:
+        keys = derive_keys(pts, salt, sha_backend=sha_backend,
+                           sha_many=sha_many)
+    ks = aes.ctr_keystream_many(list(keys), [len(p) for p in pts],
+                                encrypt_many=encrypt_many)
+    cts = [(np.frombuffer(p, np.uint8) ^ k).tobytes()
+           for p, k in zip(pts, ks)]
+    if sha_many is not None:
+        digests = sha_many(cts)
+    else:
+        digests = sha256_many(cts, backend=sha_backend)
+    return [EncryptedChunk(name=d.hex(), ciphertext=ct, key=k, sha256=d)
+            for ct, k, d in zip(cts, keys, digests)]
 
 
 def decrypt_chunk(ciphertext: bytes, key: bytes, expect_sha256: bytes) -> bytes:

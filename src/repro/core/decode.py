@@ -91,6 +91,15 @@ always wins, and ``REPRO_NO_AUTOTUNE=1`` disables the sweep entirely.
 ``benchmarks/decode_kernels.py`` records every registered backend's
 keystream and verify GB/s (and the fused combined pass) into
 BENCH_e2e.json and gates regressions.
+
+Forward direction (the PUBLISH side): AES-CTR is symmetric and SHA is
+direction-free, so the same registry hooks run chunk *creation* —
+``BatchDecoder.encrypt_batch_timed`` (batched convergent encrypt:
+derive keys → keystream → name ciphertexts, tiled on the pool) and
+``derive_keys_batch`` (keys alone, for the publish pipeline's
+names-before-bytes dedup probe). ``core.publish.PublishPipeline``
+drives them; the per-chunk ``convergent.encrypt_chunk`` stays as the
+serial oracle.
 """
 from __future__ import annotations
 
@@ -627,6 +636,69 @@ class BatchDecoder:
         return out, {"busy_s": busy, "wall_s": time.perf_counter() - t0,
                      "tiles": len(results), "eager_flushes": eager_flushes,
                      "eager_holds": eager_holds}
+
+    # --------------------------------------------------- forward direction
+    def derive_keys_batch(self, plaintexts: list, salt: bytes) -> list:
+        """Batched convergent key derivation through this backend's SHA
+        hook (``forward=`` stage 1: names-before-bytes for the publish
+        pipeline's dedup probe)."""
+        if self.backend == "serial":
+            return [convergent.derive_key(p, salt) for p in plaintexts]
+        return convergent.derive_keys(plaintexts, salt,
+                                      sha_backend=self.sha_backend,
+                                      sha_many=self._sha_many)
+
+    def encrypt_batch_timed(self, plaintexts: list, salt: bytes, *,
+                            keys: list | None = None) -> tuple:
+        """The FORWARD (``forward=True``) direction of the registry pair:
+        batched convergent encryption of N plaintext chunks through the
+        same ``encrypt_many``/``sha_many`` hooks the decode path uses,
+        tiled by ``max_batch_bytes`` and run on the GIL-releasing pool
+        exactly like ``decrypt_batch_timed``. `keys` carries pre-derived
+        convergent keys (``derive_keys_batch``) so the publish pipeline
+        never hashes a plaintext twice. Returns
+        (``EncryptedChunk`` list in input order, wall_seconds); byte-
+        identical to the serial ``convergent.encrypt_chunk`` oracle."""
+        t0 = time.perf_counter()
+        pts = list(plaintexts)
+        if not pts:
+            return [], 0.0
+        if keys is None:
+            keys = self.derive_keys_batch(pts, salt)
+        if self.backend == "serial":
+            out = [convergent.encrypt_chunk(p, salt) for p in pts]
+            return out, time.perf_counter() - t0
+        tiles = list(self._split_forward(pts, keys))
+        if len(tiles) > 1 and self.threads > 1:
+            try:
+                results = list(self._pool.get(self.threads).map(
+                    lambda t: self._forward_tile(t[0], salt, t[1]), tiles))
+            except RuntimeError:        # pool shut down concurrently
+                results = [self._forward_tile(p, salt, k) for p, k in tiles]
+        else:
+            results = [self._forward_tile(p, salt, k) for p, k in tiles]
+        out = [enc for tile in results for enc in tile]
+        COUNTERS.add("decode.forward_chunks", len(out))
+        return out, time.perf_counter() - t0
+
+    def _forward_tile(self, pts: list, salt: bytes, keys: list) -> list:
+        """One tile through the batched forward pass."""
+        return convergent.encrypt_chunks(
+            pts, salt, keys=keys, sha_backend=self.sha_backend,
+            encrypt_many=self._encrypt_many, sha_many=self._sha_many)
+
+    def _split_forward(self, pts: list, keys: list):
+        """(plaintexts, keys) tiles under ``max_batch_bytes`` each."""
+        part, pkeys, size = [], [], 0
+        for p, k in zip(pts, keys):
+            if part and size + len(p) > self.max_batch_bytes:
+                yield part, pkeys
+                part, pkeys, size = [], [], 0
+            part.append(p)
+            pkeys.append(k)
+            size += len(p)
+        if part:
+            yield part, pkeys
 
     def close(self):
         """Drain the tile pool (idempotent). Shared decoders are closed

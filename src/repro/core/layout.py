@@ -105,6 +105,61 @@ class ImageWriter:
             yield i, self.buf[i * cs:(i + 1) * cs].tobytes()
 
 
+class StreamingImageWriter:
+    """Chunk stream WITHOUT materializing the image buffer.
+
+    ``ImageWriter`` allocates the whole chunk-aligned image up front —
+    fine for benchmark-sized trees, pure waste for multi-GiB model
+    checkpoints (the image is a second full copy of the host snapshot).
+    Because every tensor starts at a chunk-aligned offset (``build_layout``
+    invariant: no chunk ever spans two tensors), the chunk sequence can
+    be produced one tensor at a time: view the tensor's bytes, slice
+    chunk-size windows, zero-pad only the final partial window. Peak
+    extra memory is ONE chunk instead of one image.
+
+    ``chunks()`` yields ``(index, bytes)`` byte-identical to
+    ``ImageWriter.chunks()`` over the same layout (oracle-tested in
+    ``tests/test_publish_pipeline.py``)."""
+
+    def __init__(self, layout: ImageLayout):
+        self.layout = layout
+
+    def chunks(self, items):
+        """Yield (chunk_index, chunk_bytes) for ``items`` — the
+        ``canonical_paths(tree)`` (name, leaf) pairs, in canonical
+        order (asserted against the layout)."""
+        cs = self.layout.chunk_size
+        expect = iter(self.layout.tensors.values())
+        next_idx = 0
+        for name, leaf in items:
+            t = next(expect)
+            assert t.name == name, (
+                f"stream order {name!r} != layout order {t.name!r}")
+            assert t.offset == next_idx * cs, (name, t.offset, next_idx)
+            raw = np.ascontiguousarray(
+                np.asarray(leaf)).view(np.uint8).reshape(-1)
+            assert raw.nbytes == t.nbytes, (name, raw.nbytes, t.nbytes)
+            nchunks = (_align(t.nbytes, cs) // cs) or 0
+            for c in range(nchunks):
+                win = raw[c * cs:(c + 1) * cs]
+                if win.nbytes < cs:          # final partial: zero-pad
+                    buf = np.zeros(cs, np.uint8)
+                    buf[:win.nbytes] = win
+                    yield next_idx, buf.tobytes()
+                else:
+                    yield next_idx, win.tobytes()
+                next_idx += 1
+        # trailing alignment (empty tree / zero-size tensors): the image
+        # is at least one chunk and always chunk-aligned
+        total = self.layout.image_size // cs
+        zero = None
+        while next_idx < total:
+            if zero is None:
+                zero = b"\x00" * cs
+            yield next_idx, zero
+            next_idx += 1
+
+
 def read_tensor(layout: ImageLayout, name: str, read_fn) -> np.ndarray:
     """Materialize one tensor via ``read_fn(offset, length) -> bytes``."""
     t = layout.tensors[name]

@@ -24,9 +24,6 @@ paper's cross-tenant dedup and admission control happen at all.
 """
 from __future__ import annotations
 
-import hashlib
-from dataclasses import dataclass
-
 import numpy as np
 
 from repro.core.blockdev import DEFAULT_PARALLELISM
@@ -38,42 +35,22 @@ from repro.core.layout import (
     canonical_paths,
 )
 from repro.core.manifest import ZERO_CHUNK, ChunkRef, Manifest, seal
+from repro.core.publish import CreateStats, image_id_for  # moved; re-exported
 from repro.core.service import ReadPolicy, single_image_service
 from repro.core.telemetry import COUNTERS
 
-
-@dataclass
-class CreateStats:
-    image_id: str
-    total_chunks: int
-    zero_chunks: int
-    unique_chunks: int          # newly uploaded (not previously in store)
-    dedup_chunks: int           # present already (cross/self dedup)
-    bytes_total: int
-    bytes_uploaded: int
-
-    @property
-    def unique_fraction(self) -> float:
-        nz = self.total_chunks - self.zero_chunks
-        return self.unique_chunks / max(1, nz)
-
-
-def image_id_for(tree_or_bytes) -> str:
-    if isinstance(tree_or_bytes, bytes):
-        return hashlib.sha256(tree_or_bytes).hexdigest()[:32]
-    items = canonical_paths(tree_or_bytes)
-    h = hashlib.sha256()
-    for name, leaf in items:
-        arr = np.asarray(leaf)
-        h.update(name.encode())
-        h.update(np.ascontiguousarray(arr).view(np.uint8).tobytes())
-    return h.hexdigest()[:32]
+__all__ = ["CreateStats", "image_id_for", "create_image", "ImageReader",
+           "sharding_slices"]
 
 
 def create_image(tree, *, tenant: str, tenant_key: bytes, store, root: str,
                  salt_epoch: int = 0, image_id: str | None = None,
                  chunk_size: int = CHUNK_SIZE) -> tuple[bytes, CreateStats]:
-    """Flatten, chunk, encrypt, upload. Returns (sealed manifest blob, stats)."""
+    """Flatten, chunk, encrypt, upload — one chunk at a time on the
+    caller thread. This is the SERIAL ORACLE for the write path; the
+    production path is ``core.publish.PublishPipeline`` (batched +
+    overlapped, byte-identical manifests/chunks by test).
+    Returns (sealed manifest blob, stats)."""
     lay = build_layout(tree, chunk_size)
     writer = ImageWriter(lay)
     for name, leaf in canonical_paths(tree):

@@ -64,12 +64,14 @@ from repro.core.decode import (
     resolve_backend_name,
 )
 from repro.core.layout import (
+    CHUNK_SIZE,
     ImageLayout,
     ranges_to_chunks,
     read_tensor,
     shard_byte_ranges,
 )
 from repro.core.manifest import open_manifest
+from repro.core.publish import PublishPipeline
 from repro.core.telemetry import COUNTERS, ScopedCounters
 
 _MODES = ("streamed", "staged", "serial")
@@ -197,6 +199,12 @@ class ServiceConfig:
     peer_fanout: int = 4                # provisioning-tree arity
     peer_deadline_s: float = 2.0        # bounded wait on a joined flight
     peer_registration: str = "all"      # "all" | "origin" (see peer.py)
+    # publish-side knobs (the write path: ``core.publish.PublishPipeline``
+    # built lazily by ``ImageService.publish``)
+    publish_backend: str | None = None  # None = decode_backend
+    publish_tile_bytes: int | str | None = None  # None = backend default
+    upload_parallelism: int = 8         # bounded-parallel PUTs per service
+    publish_warm_l1: bool = True        # push fresh ciphertexts into L1/peer
     root: str | None = None             # default root for open()
     default_policy: ReadPolicy = field(default_factory=ReadPolicy)
 
@@ -211,7 +219,7 @@ class ImageService:
 
     def __init__(self, store, config: ServiceConfig | None = None, *,
                  l1=None, l2=None, peer=None, fetch_limiter=None,
-                 admission=None, counters=None):
+                 admission=None, counters=None, pins=None, refcounts=None):
         cfg = config if config is not None else ServiceConfig()
         self.config = cfg
         self.store = store
@@ -265,6 +273,14 @@ class ImageService:
         # out: a chunk-name stampede from different images/tenants costs
         # one origin fetch process-wide (names are content addresses)
         self.flights = FlightTable()
+        # GC integration (both optional): `pins` is a ``RootPinRegistry``
+        # every reader pins during reads (generation roll cannot delete a
+        # root mid-restore); `refcounts` is a ``RefcountIndex`` the
+        # publish path maintains (wire the same objects into the
+        # ``GenerationalGC``)
+        self.pins = pins
+        self.refcounts = refcounts
+        self._publisher: PublishPipeline | None = None
         self._decoders: dict[tuple, BatchDecoder] = {}
         self._scopes: dict[str, ScopedCounters] = {}
         # LRU session/manifest caches (most-recently-used at the end);
@@ -377,8 +393,11 @@ class ImageService:
             self._decoders.clear()
             self._sessions.clear()
             self._manifests.clear()
+            publisher, self._publisher = self._publisher, None
         for dec in decoders:
             dec.close()
+        if publisher is not None:
+            publisher.close()
         with self.flights.lock:
             self.flights.flights.clear()
 
@@ -444,7 +463,7 @@ class ImageService:
                 origin_delay_s=self.config.origin_delay_s,
                 decoder=decoder if decoder is not None
                 else self.decoder_for(self.config.default_policy),
-                counters=scope, flights=self.flights)
+                counters=scope, flights=self.flights, pins=self.pins)
             if decoder is not None:
                 # a caller-owned decoder makes the session unshareable;
                 # don't pin it in the cache (a fresh decoder per open()
@@ -457,6 +476,45 @@ class ImageService:
                     self.config.session_cap, "service.session_evictions")
         manifest, layout, reader, scope = cached[:4]
         return ImageHandle(self, manifest, layout, reader, tenant, scope)
+
+    # ------------------------------------------------------------- publish
+    def publisher(self) -> PublishPipeline:
+        """The service's shared write-path pipeline (lazily built):
+        batched convergent encryption through the configured decode
+        backend, bounded-parallel single-flighted uploads, L1/peer
+        warming, and refcount maintenance when the service carries a
+        ``RefcountIndex``. Concurrent ``publish`` calls share it, so
+        publishers racing on common chunks single-flight their PUTs."""
+        with self._lock:
+            if self._publisher is None:
+                cfg = self.config
+                self._publisher = PublishPipeline(
+                    self.store,
+                    backend=cfg.publish_backend or cfg.decode_backend,
+                    tile_bytes=cfg.publish_tile_bytes,
+                    upload_parallelism=cfg.upload_parallelism,
+                    l1=self.l1 if cfg.publish_warm_l1 else None,
+                    peer=self.peer if cfg.publish_warm_l1 else None,
+                    refcounts=self.refcounts, counters=self.counters)
+            return self._publisher
+
+    def publish(self, tree, *, tenant: str, tenant_key: bytes,
+                root: str | None = None, salt_epoch: int = 0,
+                image_id: str | None = None,
+                chunk_size: int = CHUNK_SIZE) -> tuple:
+        """Publish a pytree as an image through the batched write path
+        (``core.publish.PublishPipeline``): (manifest blob, CreateStats).
+        `root` defaults to the config root. The freshly-uploaded
+        ciphertexts warm this service's L1/peer tiers, so the first
+        cold-start of a just-published image hits locally."""
+        if self._closed:
+            raise RuntimeError("ImageService is closed")
+        root = root or self.config.root
+        if root is None:
+            raise ValueError("publish needs a root (or ServiceConfig.root)")
+        return self.publisher().publish(
+            tree, tenant=tenant, tenant_key=tenant_key, root=root,
+            salt_epoch=salt_epoch, image_id=image_id, chunk_size=chunk_size)
 
     def snapshot(self) -> dict:
         return self.counters.snapshot()

@@ -77,18 +77,48 @@ class ChunkStore:
 
     # -------------------------------------------------------------- chunks
     def put_if_absent(self, root: str, name: str, data: bytes) -> bool:
-        """Returns True if the chunk was new (uploaded)."""
+        """Returns True if the chunk was new (uploaded).
+
+        Atomic: the fully-written temp file is *linked* into place
+        (``os.link`` fails with EEXIST if the name is taken), so two
+        concurrent publishers of the same chunk cannot both claim the
+        upload — exactly one returns True, counters are exact, and a
+        reader never observes a partially-written chunk. The old
+        exists-then-write sequence let both racers "win" and
+        double-count ``store.chunks_uploaded``/``bytes_uploaded``."""
         path = self._chunk_path(root, name)
-        if path.exists():
+        if path.exists():                    # cheap fast path, not the claim
             COUNTERS.inc("store.dedup_hits")
             return False
-        self._write(path, data)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp-%d" % threading.get_ident())
+        with open(tmp, "wb") as f:
+            f.write(data)
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        try:
+            os.link(tmp, path)               # atomic claim: EEXIST if lost
+        except FileExistsError:
+            COUNTERS.inc("store.dedup_hits")
+            return False
+        finally:
+            os.unlink(tmp)
         COUNTERS.inc("store.chunks_uploaded")
         COUNTERS.add("store.bytes_uploaded", len(data))
         return True
 
     def has_chunk(self, root: str, name: str) -> bool:
         return self._chunk_path(root, name).exists()
+
+    def has_chunks(self, root: str, names: list) -> set:
+        """Batched presence probe: the subset of `names` present in
+        `root`. One call per publish tile instead of one HEAD per chunk
+        (the S3 analogue is a batched HEAD round; here it saves the
+        per-call python overhead, which is what the probe loop pays)."""
+        COUNTERS.inc("store.presence_probes")
+        base = self.dir / "roots" / root / "chunks"
+        return {n for n in names if (base / n[:2] / n).exists()}
 
     def get_chunk(self, root: str, name: str) -> bytes:
         self._check_read(root)

@@ -112,6 +112,14 @@ def main():
                          "the fetch via a bounded hand-off queue; staged = "
                          "two-phase fetch-then-decode; serial = the "
                          "per-chunk byte-identity oracle")
+    ap.add_argument("--publish", action="store_true",
+                    help="image the model through the batched write path "
+                         "(core.publish.PublishPipeline via the service: "
+                         "vectorized encryption, bounded-parallel dedup'd "
+                         "PUTs, L1 warming) instead of the serial "
+                         "create_image oracle")
+    ap.add_argument("--upload-parallelism", type=int, default=8,
+                    help="bounded-parallel PUTs on the publish path")
     ap.add_argument("--eager-flush", action="store_true",
                     help="idle-queue opportunistic flush: decode the "
                          "partial tile whenever the streamed consumer "
@@ -140,6 +148,7 @@ def main():
     model = build_model(cfg)
     key = b"S" * 32
 
+    pending_tree = None
     if args.store and args.image:
         store = ChunkStore(args.store)
         blob = store.get_manifest(args.root or "R1", args.image)
@@ -148,12 +157,18 @@ def main():
         store = ChunkStore(tempfile.mkdtemp(prefix="repro-serve-"))
         gc = GenerationalGC(store)
         params = model.init(jax.random.key(0))
-        blob, stats = create_image(state_to_tree(params), tenant="serve",
-                                   tenant_key=key, store=store,
-                                   root=gc.active, chunk_size=65536)
         root = gc.active
-        print(f"imaged {stats.total_chunks} chunks "
-              f"({stats.bytes_total/1e6:.1f} MB)")
+        if args.publish:
+            # imaged below, through the service's batched write path —
+            # the fresh ciphertexts then warm the L1 the cold start hits
+            pending_tree = state_to_tree(params)
+            blob = None
+        else:
+            blob, stats = create_image(state_to_tree(params), tenant="serve",
+                                       tenant_key=key, store=store,
+                                       root=root, chunk_size=65536)
+            print(f"imaged {stats.total_chunks} chunks "
+                  f"({stats.bytes_total/1e6:.1f} MB)")
 
     # ONE config object owns every shared read-path knob: cache tiers,
     # admission control (reject excess cold starts) and fetch concurrency
@@ -177,6 +192,7 @@ def main():
         peer_deadline_s=args.peer_deadline_ms / 1e3,
         peer_registration=args.peer_registration,
         root=root,
+        upload_parallelism=args.upload_parallelism,
         default_policy=policy,
     )
     if args.max_batch_bytes is not None:
@@ -196,6 +212,14 @@ def main():
               f"{args.peer_fanout}, registration {args.peer_registration}"
               f"{', fault ' + args.peer_fault if args.peer_fault else ''}")
     service = ImageService(store, svc_cfg, peer=peer)
+    if pending_tree is not None:
+        t0 = time.time()
+        blob, stats = service.publish(pending_tree, tenant="serve",
+                                      tenant_key=key, chunk_size=65536)
+        print(f"published {stats.total_chunks} chunks "
+              f"({stats.bytes_total/1e6:.1f} MB) in {time.time()-t0:.2f}s "
+              f"[batched pipeline, {stats.unique_chunks} uploaded, "
+              f"{stats.dedup_chunks} dedup'd]")
     t0 = time.time()
     engine, stats = cold_start(model, blob, key, service, policy=policy,
                                max_batch=4, max_len=64)

@@ -9,7 +9,18 @@ Every checkpoint is a flattened image in the content-addressed store:
     only its shard's byte ranges, through the L1/L2 cache tiers — the
     paper's cold-start path, repurposed as elastic-recovery fast-start;
   * uploads run on a background thread (async checkpointing): the train
-    loop snapshots to host memory and continues.
+    loop snapshots to host memory and continues. Upload failures are
+    captured and re-raised on the NEXT ``save()`` / ``wait()`` — an
+    async checkpointer that swallows its exceptions silently loses
+    checkpoints (``ckpt.upload_failures`` counts them).
+
+With an ``ImageService`` attached (``service=``), uploads publish
+through the shared batched write path (``core.publish``): vectorized
+encryption, bounded-parallel dedup'd PUTs, refcount maintenance for the
+GC, and L1/peer warming so the first cold-start of a fresh checkpoint
+hits locally. Restores then open through the same service (shared tiers
++ single-flight). Without a service, the serial ``create_image`` /
+``ImageReader`` paths are used, as before.
 """
 from __future__ import annotations
 
@@ -54,10 +65,17 @@ class CheckpointRecord:
     stats: dict = field(default_factory=dict)
 
 
+class CheckpointUploadError(RuntimeError):
+    """A background checkpoint upload died. Raised from the next
+    ``save()`` or ``wait()`` after the failure; the original exception
+    is chained as ``__cause__``."""
+
+
 class CheckpointManager:
     def __init__(self, store, gc, *, tenant: str, tenant_key: bytes,
                  run_name: str = "run", async_upload: bool = True,
-                 chunk_size: int = 512 * 1024, l1=None, l2=None):
+                 chunk_size: int = 512 * 1024, l1=None, l2=None,
+                 service=None):
         self.store = store
         self.gc = gc
         self.tenant = tenant
@@ -66,48 +84,81 @@ class CheckpointManager:
         self.async_upload = async_upload
         self.chunk_size = chunk_size
         self.l1, self.l2 = l1, l2
+        # optional ImageService: saves publish through the shared batched
+        # write path; restores open through the shared read path
+        self.service = service
         self.records: list[CheckpointRecord] = []
         self._pending: threading.Thread | None = None
+        self._failure: BaseException | None = None
         self._lock = threading.Lock()
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, state) -> None:
-        """Snapshot to host, then upload (async by default)."""
+        """Snapshot to host, then upload (async by default). Raises
+        ``CheckpointUploadError`` if the PREVIOUS async upload failed —
+        before starting this one, so the failure maps to the earliest
+        save after the loss, not the end of the run."""
         host_tree = state_to_tree(state)     # synchronous device->host copy
         if self._pending is not None:
             self._pending.join()             # backpressure: one in flight
+        self._raise_pending_failure()
         t = threading.Thread(target=self._upload, args=(step, host_tree),
                              daemon=True)
         t.start()
         self._pending = t
         if not self.async_upload:
             t.join()
+            self._raise_pending_failure()
+
+    def _raise_pending_failure(self):
+        with self._lock:
+            err, self._failure = self._failure, None
+        if err is not None:
+            raise CheckpointUploadError(
+                f"background checkpoint upload failed: {err!r}") from err
 
     def _upload(self, step: int, host_tree: dict):
         t0 = time.time()
         image_id = f"{self.run}-step{step:08d}"
-        blob, stats = create_image(
-            host_tree, tenant=self.tenant, tenant_key=self.key,
-            store=self.store, root=self.gc.active, image_id=image_id,
-            chunk_size=self.chunk_size)
-        rec = CheckpointRecord(step, image_id, self.gc.active, {
-            "unique_chunks": stats.unique_chunks,
-            "dedup_chunks": stats.dedup_chunks,
-            "zero_chunks": stats.zero_chunks,
-            "bytes_uploaded": stats.bytes_uploaded,
-            "bytes_total": stats.bytes_total,
-            "seconds": time.time() - t0,
-        })
-        with self._lock:
-            self.records.append(rec)
-        COUNTERS.inc("ckpt.saves")
-        # tiny metadata file for discovery
-        self.store.put_manifest(self.gc.active, f"{image_id}.meta",
-                                json.dumps(rec.stats).encode())
+        try:
+            if self.service is not None:
+                blob, stats = self.service.publish(
+                    host_tree, tenant=self.tenant, tenant_key=self.key,
+                    root=self.gc.active, image_id=image_id,
+                    salt_epoch=getattr(self.gc, "epoch", 0),
+                    chunk_size=self.chunk_size)
+            else:
+                blob, stats = create_image(
+                    host_tree, tenant=self.tenant, tenant_key=self.key,
+                    store=self.store, root=self.gc.active, image_id=image_id,
+                    chunk_size=self.chunk_size)
+            rec = CheckpointRecord(step, image_id, self.gc.active, {
+                "unique_chunks": stats.unique_chunks,
+                "dedup_chunks": stats.dedup_chunks,
+                "zero_chunks": stats.zero_chunks,
+                "bytes_uploaded": stats.bytes_uploaded,
+                "bytes_total": stats.bytes_total,
+                "seconds": time.time() - t0,
+            })
+            with self._lock:
+                self.records.append(rec)
+            COUNTERS.inc("ckpt.saves")
+            # tiny metadata file for discovery
+            self.store.put_manifest(self.gc.active, f"{image_id}.meta",
+                                    json.dumps(rec.stats).encode())
+        except BaseException as e:
+            # a daemon thread's traceback otherwise evaporates: capture
+            # and surface on the next save()/wait()
+            with self._lock:
+                self._failure = e
+            COUNTERS.inc("ckpt.upload_failures")
 
     def wait(self):
+        """Join the in-flight upload; raises ``CheckpointUploadError`` if
+        it (or an earlier one) failed."""
         if self._pending is not None:
             self._pending.join()
+        self._raise_pending_failure()
 
     # ------------------------------------------------------------- restore
     def latest(self) -> CheckpointRecord | None:
@@ -115,8 +166,15 @@ class CheckpointManager:
         with self._lock:
             return self.records[-1] if self.records else None
 
-    def reader(self, rec: CheckpointRecord) -> ImageReader:
+    def reader(self, rec: CheckpointRecord):
+        """A read session for `rec`: an ``ImageHandle`` through the
+        shared service when one is attached (shared tiers, single-flight,
+        GC pins), else the legacy private ``ImageReader`` shim — the two
+        expose the same restore surface (``restore_tree`` / ``tensor``
+        / ``restore_shards`` / ``tensor_shard`` / ``prefetch``)."""
         blob = self.store.get_manifest(rec.root, rec.image_id)
+        if self.service is not None:
+            return self.service.open(blob, self.key, root=rec.root)
         return ImageReader(blob, self.key, self.store, l1=self.l1, l2=self.l2,
                            root=rec.root)
 
@@ -130,6 +188,30 @@ class CheckpointManager:
         """Demand restore of selected tensors only (shard-aware recovery)."""
         r = self.reader(rec)
         return {n: r.tensor(n) for n in names}
+
+    def retire_before(self, keep_last: int = 1) -> set:
+        """Retention policy: drop refcounts + manifests of all but the
+        newest `keep_last` checkpoints (through ``gc.retire_image``).
+        Returns the union of chunk names that went zero-referenced —
+        reclaimed by the next ``gc.sweep(root)``. Requires a GC with the
+        refcounted API (PR 9+) and a service-published history; no-op
+        otherwise."""
+        self.wait()
+        retire = getattr(self.gc, "retire_image", None)
+        if retire is None:
+            return set()
+        with self._lock:
+            old, keep = (self.records[:-keep_last],
+                         self.records[-keep_last:]) if keep_last > 0 else \
+                        (list(self.records), [])
+            self.records = keep
+        dead: set = set()
+        for rec in old:
+            dead |= retire(rec.root, rec.image_id)
+            meta = f"{rec.image_id}.meta"
+            if self.store.has_manifest(rec.root, meta):
+                self.store.delete_manifest(rec.root, meta)
+        return dead
 
     def discover(self, run: str | None = None) -> list:
         """Rebuild records from the store (cross-process restart path)."""

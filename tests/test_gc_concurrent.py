@@ -1,0 +1,237 @@
+"""GC-vs-live-reader races (§3.4 epoch/pin protocol): every generation
+transition — new_root, migrate, expire, delete_expired, sweep — runs
+while a streamed restore is provably mid-flight (a gated store freezes
+its next origin fetch), and the restore must stay byte-identical to the
+serial oracle. Expired reads alarm and freeze deletion; pinned roots
+refuse deletion and defer sweeps; images created outside the refcount
+index are never swept."""
+import threading
+
+import numpy as np
+
+from repro.core.gc import GenerationalGC, RefcountIndex
+from repro.core.loader import create_image
+from repro.core.manifest import ZERO_CHUNK, open_manifest
+from repro.core.service import ImageService, ReadPolicy, ServiceConfig
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+
+KEY = b"G" * 32
+STREAMED = ReadPolicy(mode="streamed", parallelism=2)
+
+
+class GatedStore(ChunkStore):
+    """The Nth get_chunk after ``arm()`` blocks until ``release`` —
+    freezes a streamed restore mid-flight, deterministically."""
+
+    def __init__(self, path):
+        super().__init__(path)
+        self._gate_lock = threading.Lock()
+        self._arm_at = None
+        self._calls = 0
+        self.reached = threading.Event()
+        self.release = threading.Event()
+
+    def arm(self):
+        with self._gate_lock:
+            self._arm_at = self._calls + 1
+        self.reached.clear()
+        self.release.clear()
+
+    def get_chunk(self, root, name):
+        with self._gate_lock:
+            self._calls += 1
+            hit = self._arm_at is not None and self._calls == self._arm_at
+        if hit:
+            self.reached.set()
+            assert self.release.wait(timeout=30), "gate never released"
+        return super().get_chunk(root, name)
+
+
+def make_tree(seed=0, n=4, shape=(32, 256)):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}/w": rng.standard_normal(shape).astype(np.float32)
+            for i in range(n)}
+
+
+def fixture(tmp_path):
+    """(store, gc, svc) with pins + refcounts wired and NO caches, so
+    every read hits the (gateable) origin."""
+    store = GatedStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=0, l2_nodes=0, max_coldstarts=0, fetch_concurrency=0,
+        decode_backend="numpy", publish_warm_l1=False, root=gc.active),
+        pins=gc.pins, refcounts=gc.refcounts)
+    gc.pipeline = svc.publisher()
+    return store, gc, svc
+
+
+def frozen_restore(svc, store, blob, root):
+    """Start a streamed restore and block it on its next origin fetch.
+    Returns (thread, result dict with 'tree' set on completion)."""
+    result = {}
+
+    def run():
+        h = svc.open(blob, KEY, root=root)
+        result["tree"] = h.restore_tree(policy=STREAMED)
+
+    store.arm()
+    t = threading.Thread(target=run)
+    t.start()
+    assert store.reached.wait(timeout=30), "restore never hit origin"
+    return t, result
+
+
+def finish(store, t, result, tree):
+    store.release.set()
+    t.join(timeout=60)
+    assert not t.is_alive()
+    for name, arr in tree.items():
+        assert np.array_equal(result["tree"][name], np.asarray(arr)), name
+
+
+def test_new_root_and_migrate_mid_restore_byte_identical(tmp_path):
+    store, gc, svc = fixture(tmp_path)
+    tree = make_tree(seed=1)
+    old = gc.active
+    blob, _ = svc.publish(tree, tenant="t", tenant_key=KEY,
+                          image_id="img", chunk_size=4096)
+    t, result = frozen_restore(svc, store, blob, old)
+    assert gc.pins.pinned(old)
+    gc.new_root()                    # generation rolls under the reader
+    gc.migrate(old)
+    finish(store, t, result, tree)   # reader finishes byte-identical
+    assert not gc.pins.pinned(old)
+    # the migrated copy restores from the new root too
+    blob2 = store.get_manifest(gc.active, "img")
+    flat = svc.open(blob2, KEY, root=gc.active).restore_tree()
+    for name, arr in tree.items():
+        assert np.array_equal(flat[name], np.asarray(arr))
+    svc.close()
+
+
+def test_expire_and_delete_refused_while_pinned(tmp_path):
+    store, gc, svc = fixture(tmp_path)
+    tree = make_tree(seed=2)
+    old = gc.active
+    blob, _ = svc.publish(tree, tenant="t", tenant_key=KEY,
+                          image_id="img", chunk_size=4096)
+    t, result = frozen_restore(svc, store, blob, old)
+    gc.new_root()
+    gc.migrate(old)
+    gc.expire(old)                   # races the still-pinned reader
+    before = COUNTERS.snapshot().get("gc.deletions_blocked_pinned", 0)
+    assert gc.delete_expired(old) is False
+    assert COUNTERS.snapshot()["gc.deletions_blocked_pinned"] == before + 1
+    # the frozen reader resumes INTO an expired root: it must still get
+    # its bytes (byte-identical), but the reads alarm and freeze ALL
+    # further deletion — the paper's stop-everything safety signal
+    finish(store, t, result, tree)
+    assert gc.stats.alarms
+    assert store.deletion_frozen
+    assert gc.delete_expired(old) is False
+    svc.close()
+
+
+def test_drained_root_deletes_cleanly(tmp_path):
+    store, gc, svc = fixture(tmp_path)
+    tree = make_tree(seed=3)
+    old = gc.active
+    blob, _ = svc.publish(tree, tenant="t", tenant_key=KEY,
+                          image_id="img", chunk_size=4096)
+    t, result = frozen_restore(svc, store, blob, old)
+    gc.new_root()
+    gc.migrate(old)
+    finish(store, t, result, tree)   # drain BEFORE expiring: no alarm
+    gc.expire(old)
+    assert gc.delete_expired(old) is True
+    assert gc.stats.alarms == []
+    assert not store.deletion_frozen
+    svc.close()
+
+
+def test_sweep_deferred_while_pinned_then_reclaims(tmp_path):
+    store, gc, svc = fixture(tmp_path)
+    root = gc.active
+    keep = make_tree(seed=4)
+    drop = make_tree(seed=5)
+    blob_keep, _ = svc.publish(keep, tenant="t", tenant_key=KEY,
+                               image_id="keep", chunk_size=4096)
+    _, st_drop = svc.publish(drop, tenant="t", tenant_key=KEY,
+                             image_id="drop", chunk_size=4096)
+    dead = gc.retire_image(root, "drop")
+    assert len(dead) == st_drop.unique_chunks
+    t, result = frozen_restore(svc, store, blob_keep, root)
+    before = COUNTERS.snapshot().get("gc.sweeps_deferred_pinned", 0)
+    assert gc.sweep(root) == 0       # deferred: the reader pins the root
+    assert COUNTERS.snapshot()["gc.sweeps_deferred_pinned"] == before + 1
+    for name in dead:
+        assert store.has_chunk(root, name)   # nothing deleted early
+    finish(store, t, result, keep)
+    assert gc.sweep(root) == len(dead)
+    for name in dead:
+        assert not store.has_chunk(root, name)
+    # the kept image is untouched
+    flat = svc.open(blob_keep, KEY, root=root).restore_tree()
+    for name, arr in keep.items():
+        assert np.array_equal(flat[name], np.asarray(arr))
+    svc.close()
+
+
+def test_sweep_never_deletes_unindexed_oracle_images(tmp_path):
+    """Safety floor: an image created by the serial oracle (never
+    registered in the refcount index) must survive any sweep."""
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    root = gc.active
+    oracle_tree = make_tree(seed=6)
+    blob, st = create_image(oracle_tree, tenant="legacy", tenant_key=KEY,
+                            store=store, root=root, chunk_size=4096,
+                            image_id="legacy")
+    assert "legacy" not in gc.refcounts.live_images(root)
+    assert gc.sweep(root) == 0
+    for c in open_manifest(blob, KEY).chunks:
+        if c.name != ZERO_CHUNK:
+            assert store.has_chunk(root, c.name)
+
+
+def test_refcount_index_shared_chunks_survive_retire():
+    idx = RefcountIndex()
+    idx.add_image("R1", "a", ["c1", "c2", "c3"])
+    idx.add_image("R1", "b", ["c2", "c3", "c4"])
+    idx.add_image("R1", "a", ["c1"])           # idempotent republish: no-op
+    assert idx.refcount("R1", "c2") == 2
+    dead = idx.remove_image("R1", "a")
+    assert dead == {"c1"}                      # c2/c3 still held by b
+    assert idx.live_chunks("R1") == {"c2", "c3", "c4"}
+    assert idx.remove_image("R1", "a") == set()   # double-retire: no-op
+    assert idx.remove_image("R1", "b") == {"c2", "c3", "c4"}
+    assert idx.live_images("R1") == set()
+
+
+def test_epoch_bump_salts_new_generation(tmp_path):
+    """Publishes after a generation roll use the new epoch's salt: the
+    same plaintext gets NEW chunk names (no stale cross-epoch aliasing),
+    while within one epoch it dedups."""
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    svc = ImageService(store, ServiceConfig(
+        l2_nodes=0, max_coldstarts=0, fetch_concurrency=0,
+        decode_backend="numpy", root=gc.active),
+        pins=gc.pins, refcounts=gc.refcounts)
+    gc.pipeline = svc.publisher()
+    tree = make_tree(seed=7)
+    b1, _ = svc.publish(tree, tenant="t", tenant_key=KEY,
+                        root=gc.active, salt_epoch=gc.epoch,
+                        image_id="e0", chunk_size=4096)
+    gc.new_root()
+    b2, _ = svc.publish(tree, tenant="t", tenant_key=KEY,
+                        root=gc.active, salt_epoch=gc.epoch,
+                        image_id="e1", chunk_size=4096)
+    n1 = {c.name for c in open_manifest(b1, KEY).chunks
+          if c.name != ZERO_CHUNK}
+    n2 = {c.name for c in open_manifest(b2, KEY).chunks
+          if c.name != ZERO_CHUNK}
+    assert n1.isdisjoint(n2)
+    svc.close()

@@ -1,0 +1,330 @@
+"""Batched publish pipeline: byte identity against the serial oracle,
+concurrent-publisher races, skip-encryption dedup, service integration,
+and async checkpoint-upload failure capture."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.gc import GenerationalGC
+from repro.core.layout import (
+    ImageWriter,
+    StreamingImageWriter,
+    build_layout,
+    canonical_paths,
+)
+from repro.core.loader import create_image
+from repro.core.manifest import ZERO_CHUNK, open_manifest, read_public
+from repro.core.publish import NameIndex, PublishPipeline, UploadFlights
+from repro.core.service import ImageService, ServiceConfig
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+
+KEY = b"K" * 32
+
+
+def make_tree(seed=0, n=5, shape=(48, 256), with_zeros=True):
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}/w": rng.standard_normal(shape).astype(np.float32)
+            for i in range(n)}
+    if with_zeros:
+        tree["frozen/zeros"] = np.zeros(shape, np.float32)
+    return tree
+
+
+def assert_same_image(store_a, blob_a, store_b, blob_b, root="R1"):
+    """seal() is nondeterministic (AEAD nonce): compare the public body,
+    the decrypted chunk refs and the stored ciphertexts — never blobs."""
+    assert read_public(blob_a) == read_public(blob_b)
+    ma, mb = open_manifest(blob_a, KEY), open_manifest(blob_b, KEY)
+    assert [(c.index, c.name, c.key, c.sha256) for c in ma.chunks] == \
+           [(c.index, c.name, c.key, c.sha256) for c in mb.chunks]
+    for c in ma.chunks:
+        if c.name != ZERO_CHUNK:
+            assert store_a.get_chunk(root, c.name) == \
+                store_b.get_chunk(root, c.name)
+
+
+def test_streaming_writer_matches_imagewriter():
+    """The streaming chunker (one tensor resident at a time) emits the
+    same (index, bytes) sequence as the materializing oracle writer."""
+    tree = make_tree(seed=3)
+    items = canonical_paths(tree)
+    lay = build_layout(tree, 4096)
+    w = ImageWriter(lay)
+    for name, leaf in items:
+        w.put(name, leaf)
+    oracle = list(w.chunks())
+    streamed = list(StreamingImageWriter(lay).chunks(items))
+    assert [i for i, _ in oracle] == [i for i, _ in streamed]
+    assert all(a == b for (_, a), (_, b) in zip(oracle, streamed))
+
+
+@pytest.mark.parametrize("chunk_size", [2048, 8192])
+def test_publish_byte_identical_to_serial_oracle(tmp_path, chunk_size):
+    tree = make_tree()
+    s1 = ChunkStore(tmp_path / "serial")
+    s2 = ChunkStore(tmp_path / "batched")
+    b1, st1 = create_image(tree, tenant="t", tenant_key=KEY, store=s1,
+                           root="R1", chunk_size=chunk_size)
+    pipe = PublishPipeline(s2)
+    b2, st2 = pipe.publish(tree, tenant="t", tenant_key=KEY, root="R1",
+                           chunk_size=chunk_size)
+    pipe.close()
+    assert_same_image(s1, b1, s2, b2)
+    assert (st1.total_chunks, st1.zero_chunks, st1.unique_chunks,
+            st1.dedup_chunks, st1.bytes_total, st1.bytes_uploaded) == \
+           (st2.total_chunks, st2.zero_chunks, st2.unique_chunks,
+            st2.dedup_chunks, st2.bytes_total, st2.bytes_uploaded)
+    assert st2.zero_chunks > 0              # the zero plane was elided
+
+
+def test_republish_skips_encryption_entirely(tmp_path):
+    """A re-publish resolves every chunk through the NameIndex + one
+    presence probe: nothing encrypted, nothing uploaded."""
+    store = ChunkStore(tmp_path / "s")
+    pipe = PublishPipeline(store)
+    tree = make_tree(seed=1)
+    pipe.publish(tree, tenant="t", tenant_key=KEY, root="R1",
+                 chunk_size=4096)
+    before = COUNTERS.snapshot()
+    blob2, st2 = pipe.publish(tree, tenant="t", tenant_key=KEY, root="R1",
+                              image_id="again", chunk_size=4096)
+    after = COUNTERS.snapshot()
+    pipe.close()
+    assert st2.unique_chunks == 0 and st2.bytes_uploaded == 0
+    nonzero = st2.total_chunks - st2.zero_chunks
+    assert st2.dedup_chunks == nonzero
+    skipped = (after.get("publish.encrypt_skipped_chunks", 0)
+               - before.get("publish.encrypt_skipped_chunks", 0))
+    assert skipped == nonzero
+    # and the re-published manifest still restores: same refs as a
+    # serial re-create
+    m = open_manifest(blob2, KEY)
+    for c in m.chunks:
+        if c.name != ZERO_CHUNK:
+            assert store.has_chunk("R1", c.name)
+
+
+def test_name_index_is_salt_safe(tmp_path):
+    """Same plaintext under a different salt (epoch) derives a different
+    key — the index can never alias across epochs."""
+    store = ChunkStore(tmp_path / "s")
+    store.create_root("R2")
+    pipe = PublishPipeline(store)
+    tree = make_tree(seed=2, with_zeros=False)
+    _, st1 = pipe.publish(tree, tenant="t", tenant_key=KEY, root="R1",
+                          salt_epoch=0, chunk_size=4096)
+    _, st2 = pipe.publish(tree, tenant="t", tenant_key=KEY, root="R2",
+                          salt_epoch=1, image_id="other",
+                          chunk_size=4096)
+    pipe.close()
+    # different salt -> different names -> everything re-uploaded
+    assert st2.unique_chunks == st1.unique_chunks
+    assert st2.bytes_uploaded == st1.bytes_uploaded
+
+
+def test_name_index_cap_trims():
+    idx = NameIndex(cap=100)
+    idx.put_many((bytes([i % 256, i // 256]) + b"k" * 30, f"n{i}")
+                 for i in range(150))
+    assert len(idx) <= 100
+    # the newest entries survive the trim
+    assert idx.get_many([bytes([149 % 256, 149 // 256]) + b"k" * 30]) == \
+        ["n149"]
+
+
+def test_put_if_absent_concurrent_race(tmp_path):
+    """Satellite regression: N threads racing put_if_absent on the SAME
+    fresh name — exactly one may win (atomic claim), and the stored
+    bytes are intact. The old exists()-then-write path double-counted
+    and could tear."""
+    store = ChunkStore(tmp_path / "s")
+    data = b"x" * 4096
+    for rnd in range(5):
+        name = f"{rnd:02d}" + "ab" * 31
+        n = 8
+        barrier = threading.Barrier(n)
+        wins = []
+
+        def racer():
+            barrier.wait()
+            if store.put_if_absent("R1", name, data):
+                wins.append(1)
+
+        threads = [threading.Thread(target=racer) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(wins) == 1, f"round {rnd}: {len(wins)} winners"
+        assert store.get_chunk("R1", name) == data
+
+
+def test_concurrent_publishers_single_flight(tmp_path):
+    """Two publishers of the same tree through one pipeline: the store
+    ends up with one copy of every chunk and the combined stats account
+    each chunk exactly once (unique on one side, dedup'd on the other)."""
+    store = ChunkStore(tmp_path / "s")
+    pipe = PublishPipeline(store, upload_parallelism=4)
+    tree = make_tree(seed=4, with_zeros=False)
+    barrier = threading.Barrier(2)
+    out = {}
+
+    def publisher(tag):
+        barrier.wait()
+        out[tag] = pipe.publish(tree, tenant="t", tenant_key=KEY,
+                                root="R1", image_id=f"img-{tag}",
+                                chunk_size=2048)
+
+    threads = [threading.Thread(target=publisher, args=(i,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    pipe.close()
+    st0, st1 = out[0][1], out[1][1]
+    stored = len(store.list_chunks("R1"))
+    assert st0.unique_chunks + st1.unique_chunks == stored
+    nonzero = st0.total_chunks - st0.zero_chunks
+    assert st0.unique_chunks + st0.dedup_chunks == nonzero
+    assert st1.unique_chunks + st1.dedup_chunks == nonzero
+    # both manifests decrypt to identical chunk refs (ids differ)
+    ma = open_manifest(out[0][0], KEY)
+    mb = open_manifest(out[1][0], KEY)
+    assert [(c.index, c.name, c.key, c.sha256) for c in ma.chunks] == \
+           [(c.index, c.name, c.key, c.sha256) for c in mb.chunks]
+
+
+def test_copy_chunks_batched_migration(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    store.create_root("R2")
+    pipe = PublishPipeline(store)
+    tree = make_tree(seed=5)
+    blob, _ = pipe.publish(tree, tenant="t", tenant_key=KEY, root="R1",
+                           chunk_size=4096)
+    names = [c.name for c in open_manifest(blob, KEY).chunks]
+    copied = pipe.copy_chunks("R1", "R2", names)
+    assert copied == len(set(n for n in names if n != ZERO_CHUNK))
+    for n in names:
+        if n != ZERO_CHUNK:
+            assert store.get_chunk("R2", n) == store.get_chunk("R1", n)
+    # idempotent: second copy finds everything present
+    assert pipe.copy_chunks("R1", "R2", names) == 0
+    pipe.close()
+
+
+def test_service_publish_restores_and_refcounts(tmp_path):
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    svc = ImageService(store, ServiceConfig(
+        l2_nodes=0, max_coldstarts=0, fetch_concurrency=0,
+        decode_backend="numpy", root=gc.active),
+        pins=gc.pins, refcounts=gc.refcounts)
+    tree = make_tree(seed=6)
+    blob, stats = svc.publish(tree, tenant="t", tenant_key=KEY,
+                              image_id="img", chunk_size=4096)
+    assert "img" in gc.refcounts.live_images(gc.active)
+    assert len(gc.refcounts.live_chunks(gc.active)) == stats.unique_chunks
+    flat = svc.open(blob, KEY).restore_tree()
+    for name, arr in tree.items():
+        assert np.array_equal(flat[name], np.asarray(arr))
+    # the manifest is fetchable from the store under the active root
+    assert store.get_manifest(gc.active, "img") == blob
+    svc.close()
+
+
+class _FailingStore(ChunkStore):
+    """put_if_absent dies after `allow` successes — mid-upload loss."""
+
+    def __init__(self, path, allow=0):
+        super().__init__(path)
+        self.allow = allow
+        self._puts = 0
+
+    def put_if_absent(self, root, name, data):
+        self._puts += 1
+        if self._puts > self.allow:
+            raise OSError("disk gone")
+        return super().put_if_absent(root, name, data)
+
+
+class TestCheckpointUploadFailure:
+    def _manager(self, store, **kw):
+        from repro.train.checkpoint import CheckpointManager
+        gc = GenerationalGC(store)
+        return CheckpointManager(store, gc, tenant="train",
+                                 tenant_key=b"C" * 32, chunk_size=4096,
+                                 **kw)
+
+    def test_async_failure_surfaces_on_wait(self, tmp_path):
+        from repro.train.checkpoint import CheckpointUploadError
+        ck = self._manager(_FailingStore(tmp_path / "s", allow=2))
+        before = COUNTERS.snapshot().get("ckpt.upload_failures", 0)
+        ck.save(0, make_tree(seed=7))
+        with pytest.raises(CheckpointUploadError) as ei:
+            ck.wait()
+        assert isinstance(ei.value.__cause__, OSError)
+        assert COUNTERS.snapshot()["ckpt.upload_failures"] == before + 1
+        assert ck.records == []             # the loss is not hidden
+        ck.wait()                           # failure raised exactly once
+
+    def test_async_failure_surfaces_on_next_save(self, tmp_path):
+        from repro.train.checkpoint import CheckpointUploadError
+        ck = self._manager(_FailingStore(tmp_path / "s", allow=2))
+        ck.save(0, make_tree(seed=7))
+        ck._pending.join()                  # upload thread has died
+        with pytest.raises(CheckpointUploadError):
+            ck.save(1, make_tree(seed=8))
+
+    def test_sync_failure_raises_immediately(self, tmp_path):
+        from repro.train.checkpoint import CheckpointUploadError
+        ck = self._manager(_FailingStore(tmp_path / "s", allow=0),
+                           async_upload=False)
+        with pytest.raises(CheckpointUploadError):
+            ck.save(0, make_tree(seed=7))
+
+    def test_healthy_manager_never_raises(self, tmp_path):
+        ck = self._manager(ChunkStore(tmp_path / "s"))
+        tree = make_tree(seed=9)
+        ck.save(0, tree)
+        ck.wait()
+        rec = ck.latest()
+        assert rec is not None and rec.step == 0
+        flat = ck.reader(rec).restore_tree()
+        for name, arr in tree.items():
+            assert np.array_equal(flat[name], np.asarray(arr))
+
+
+def test_checkpoint_retention_through_service(tmp_path):
+    """save N checkpoints through the shared service, retire all but the
+    last, sweep — the survivor still restores byte-identical and the
+    dead chunks are really gone."""
+    from repro.train.checkpoint import CheckpointManager
+    store = ChunkStore(tmp_path / "s")
+    gc = GenerationalGC(store)
+    svc = ImageService(store, ServiceConfig(
+        l2_nodes=0, max_coldstarts=0, fetch_concurrency=0,
+        decode_backend="numpy", root=gc.active),
+        pins=gc.pins, refcounts=gc.refcounts)
+    gc.pipeline = svc.publisher()
+    ck = CheckpointManager(store, gc, tenant="train", tenant_key=b"C" * 32,
+                           chunk_size=2048, service=svc)
+    tree = make_tree(seed=10, with_zeros=False)
+    rng = np.random.default_rng(11)
+    for step in range(3):
+        nm = list(tree)[step % len(tree)]
+        tree[nm] = tree[nm] + rng.standard_normal(
+            tree[nm].shape).astype(np.float32)
+        ck.save(step, tree)
+    ck.wait()
+    dead = ck.retire_before(keep_last=1)
+    assert dead                             # old deltas went zero-ref
+    swept = gc.sweep(gc.active)
+    assert swept == len(dead)
+    rec = ck.latest()
+    flat = ck.reader(rec).restore_tree()
+    for name, arr in tree.items():
+        assert np.array_equal(flat[name], np.asarray(arr))
+    svc.close()
