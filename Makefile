@@ -1,6 +1,6 @@
 # Offline-friendly entry points (no network-dependent packages).
 .PHONY: test verify bench bench-read bench-decode bench-fault bench-storm \
-	bench-publish
+	bench-publish bench-chaos
 
 test: verify     ## alias for verify
 
@@ -18,6 +18,9 @@ bench-decode:    ## per-decode-backend keystream/verify GB/s -> BENCH_e2e.json
 
 bench-fault:     ## §4 resilience: mid-restore faults, hedged GETs, 100-tenant Zipf -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py fault_injection
+
+bench-chaos:     ## cross-tier chaos matrix + breaker recovery + defaults-off baseline -> BENCH_e2e.json
+	PYTHONPATH=src:. python benchmarks/run.py chaos_matrix
 
 bench-storm:     ## 1->100 worker cold-start storm through the peer tier -> BENCH_e2e.json
 	PYTHONPATH=src:. python benchmarks/run.py coldstart_storm

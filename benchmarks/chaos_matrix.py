@@ -1,0 +1,415 @@
+"""Cross-tier chaos matrix: every cache tier fails AT ONCE and the
+restore must still be byte-identical to the serial oracle.
+
+Where ``fault_injection.py`` stresses the L2 alone, this benchmark
+composes faults across all four tiers simultaneously:
+
+* **poisoned L1** — corrupt ciphertexts planted directly in the trial
+  service's L1 (a bit-flipped page cache). Convergent integrity
+  checking must detect them, evict, and refetch;
+* **crashed peer** — the worker holding every advertised chunk gets a
+  ``FaultPlan.crashed()``; transfers from it fail and fall through;
+* **blackholed L2 node** — one stripe node goes silent; the per-stripe
+  deadline (not a hang) bounds its cost;
+* **flaky origin** — the ``FaultyStore`` wrapper injects transient
+  errors (10%) and corrupt reads (1%); the ``RetryPolicy`` absorbs the
+  former, evict+refetch rounds the latter.
+
+Three phases, all recorded into BENCH_e2e.json under ``chaos_matrix``:
+
+1. **matrix** — the composition above over streamed restores (fresh
+   cold-L1 service per trial): byte identity vs the serial oracle every
+   trial, zero unrecovered failures, bounded p99, every restore run on
+   a join-with-timeout thread so a deadlock FAILS instead of hanging.
+2. **breaker** — a full origin outage with the circuit breaker on: the
+   breaker must trip open, cold starts must be shed with a retry-after
+   while it is open, and after the origin heals the half-open probe
+   must close it again — with the in-flight restore completing
+   byte-identical (its retries become the probes).
+3. **baseline** — all resilience knobs at their DEFAULTS (retries off,
+   breaker off, healthy fault plan): byte identity plus ZERO movement
+   on every ``retry.*`` / ``breaker.*`` / ``faults.*`` counter — the
+   fast-fail guarantee that defaults-off leaves the existing
+   BENCH_e2e.json baselines untouched.
+
+``--smoke`` is the CI gate (scripts/test.sh / make verify): hard
+non-zero exit on any byte divergence, unrecovered failure, deadlock,
+missed breaker transition, or baseline counter movement.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.cache.distributed import DistributedCache, FaultPlan
+from repro.core.faults import FaultyStore, OriginFaultPlan
+from repro.core.gc import GenerationalGC
+from repro.core.loader import ImageReader, create_image
+from repro.core.service import (ImageService, ReadPolicy, ServiceConfig,
+                                build_peer_mesh)
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS
+
+TENANT_KEY = b"C" * 32
+PARALLELISM = 8
+JOIN_TIMEOUT_S = 120.0
+
+
+def _build_image(store, root, *, chunks=100, chunk_size=8192, seed=9):
+    """One all-unique image (random floats: no zero elision, no
+    intra-image dedup — every chunk really travels)."""
+    rng = np.random.default_rng(seed)
+    tree = {"w": rng.standard_normal(
+        (chunks * chunk_size // 4,)).astype(np.float32)}
+    blob, stats = create_image(tree, tenant="chaos", tenant_key=TENANT_KEY,
+                               store=store, root=root, chunk_size=chunk_size)
+    return tree, blob, stats
+
+
+def _resilient_service(store, l2, peer, *, seed: int,
+                       l1_bytes=32 << 20) -> ImageService:
+    """A fresh service with its own COLD L1 over the shared L2/peer
+    tiers, retries ON (seeded jitter for reproducible runs)."""
+    return ImageService(store, ServiceConfig(
+        l1_bytes=l1_bytes, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0, retry_attempts=6, retry_base_s=0.002,
+        retry_cap_s=0.02, retry_integrity_refetches=3, retry_seed=seed),
+        l2=l2, peer=peer)
+
+
+def _flip_byte(data: bytes, pos: int = 0) -> bytes:
+    return data[:pos] + bytes([data[pos] ^ 0xFF]) + data[pos + 1:]
+
+
+def _restore_join(handle, policy, timeout_s=JOIN_TIMEOUT_S) -> dict:
+    """Run a restore on a join-with-timeout thread: a deadlock becomes
+    a hard failure instead of a hung benchmark."""
+    out = {}
+
+    def body():
+        try:
+            out["flat"] = handle.restore_tree(policy=policy)
+        except BaseException as e:          # re-raised on the caller
+            out["err"] = e
+
+    th = threading.Thread(target=body, daemon=True)
+    th.start()
+    th.join(timeout_s)
+    if th.is_alive():
+        raise RuntimeError(f"restore deadlocked (no completion within "
+                           f"{timeout_s:.0f}s)")
+    if "err" in out:
+        raise out["err"]
+    return out["flat"]
+
+
+def _wait_for(pred, timeout_s=15.0) -> bool:
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout_s:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def _delta(before: dict, after: dict, name: str) -> float:
+    return after.get(name, 0.0) - before.get(name, 0.0)
+
+
+# ------------------------------------------------------------------ phases
+def matrix_phase(raw_store, blob, oracle, *, trials=5, poison=5,
+                 chunks=100, failures=None) -> dict:
+    """All four tiers fail at once; every trial must restore
+    byte-identical with zero unrecovered failures."""
+    fstore = FaultyStore(raw_store, seed=17)
+    l2 = DistributedCache(num_nodes=8, mem_bytes=32 << 20,
+                          flash_bytes=256 << 20, seed=11)
+    mesh = build_peer_mesh(ServiceConfig(), 4, seed=3)
+
+    # warm pass AS WORKER 1 (healthy everything): fills the shared L2
+    # and advertises every chunk under worker 1 in the peer directory —
+    # the worker we are about to crash
+    warm_svc = _resilient_service(fstore, l2, mesh.client(1), seed=0)
+    warm_h = warm_svc.open(blob, TENANT_KEY)
+    warm_h.restore_tree(policy=ReadPolicy(mode="streamed",
+                                          parallelism=PARALLELISM))
+    names = [c.name for c in warm_h.manifest.chunks]
+
+    # the matrix: crashed peer + blackholed L2 node + flaky origin
+    mesh.set_fault(1, FaultPlan.crashed())
+    l2.nodes[sorted(l2.nodes)[0]].set_fault(FaultPlan.blackholed())
+    fstore.set_fault(OriginFaultPlan.flaky(error_p=0.10, corrupt_p=0.01))
+
+    walls = []
+    before = COUNTERS.snapshot()
+    errors = 0
+    for trial in range(trials):
+        svc = _resilient_service(fstore, l2, mesh.client(0), seed=trial + 1)
+        h = svc.open(blob, TENANT_KEY)
+        # poisoned L1: plant bit-flipped ciphertexts for the first
+        # `poison` chunks in THIS trial's cold L1
+        for name in names[:poison]:
+            svc.l1.put(name, _flip_byte(raw_store.get_chunk(
+                warm_h.manifest.root_id, name)))
+        t0 = time.perf_counter()
+        try:
+            flat = _restore_join(h, ReadPolicy(mode="streamed",
+                                               parallelism=PARALLELISM))
+        except BaseException as e:
+            errors += 1
+            if failures is not None:
+                failures.append(f"matrix trial {trial}: unrecovered {e!r}")
+                continue
+            raise
+        walls.append(time.perf_counter() - t0)
+        for tname in oracle:
+            if not np.array_equal(flat[tname], oracle[tname]):
+                msg = f"matrix trial {trial}: bytes diverged on {tname}"
+                if failures is not None:
+                    failures.append(msg)
+                else:
+                    raise AssertionError(msg)
+        svc.close()
+    after = COUNTERS.snapshot()
+    warm_svc.close()
+    hits = _delta(before, after, "l2.hits")
+    misses = _delta(before, after, "l2.misses")
+    return {
+        "trials": trials,
+        "chunks": chunks,
+        "poisoned_l1_entries": poison,
+        "unrecovered_failures": errors,
+        "restore_p50_ms": float(np.percentile(walls, 50) * 1e3)
+        if walls else float("nan"),
+        "restore_p99_ms": float(np.percentile(walls, 99) * 1e3)
+        if walls else float("nan"),
+        "origin_fetches": _delta(before, after, "read.origin_fetches"),
+        "l1_hits": _delta(before, after, "read.l1_hits"),
+        "peer_hits": _delta(before, after, "read.peer_hits"),
+        "l2_hits": hits,
+        "l2_hit_rate": hits / max(1.0, hits + misses),
+        "retry_attempts": _delta(before, after, "retry.attempts"),
+        "retry_retries": _delta(before, after, "retry.retries"),
+        "retry_giveups": _delta(before, after, "retry.giveups"),
+        "integrity_refetches": _delta(before, after,
+                                      "retry.integrity_refetches"),
+        "injected_transient": _delta(before, after,
+                                     "faults.origin_transient"),
+        "injected_corrupt": _delta(before, after, "faults.origin_corrupt"),
+        "byte_identical": errors == 0,
+    }
+
+
+def breaker_phase(raw_store, blob, oracle, *, cooldown_s=0.25,
+                  failures=None) -> dict:
+    """Full origin outage under the breaker: trip open -> shed cold
+    starts with retry-after -> heal -> half-open probe closes it — the
+    in-flight restore completing byte-identical throughout."""
+    fstore = FaultyStore(raw_store, OriginFaultPlan.unavailable(), seed=23)
+    svc = ImageService(fstore, ServiceConfig(
+        l1_bytes=16 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=4, retry_attempts=80, retry_base_s=0.002,
+        retry_cap_s=0.03, retry_seed=5, breaker_threshold=0.5,
+        breaker_window=16, breaker_min_samples=4,
+        breaker_cooldown_s=cooldown_s))
+    h = svc.open(blob, TENANT_KEY)
+    before = COUNTERS.snapshot()
+    out = {}
+
+    def body():
+        try:
+            out["flat"] = h.restore_tree(policy=ReadPolicy(
+                mode="streamed", parallelism=4))
+        except BaseException as e:
+            out["err"] = e
+
+    th = threading.Thread(target=body, daemon=True)
+    th.start()
+
+    def fail(msg):
+        if failures is not None:
+            failures.append(msg)
+        else:
+            raise AssertionError(msg)
+
+    opened = _wait_for(lambda: svc.breaker.state == "open")
+    shed_ok, retry_after = False, 0.0
+    if not opened:
+        fail("breaker never opened under a full origin outage")
+    else:
+        # brownout rung: cold starts are shed while the breaker is open
+        try:
+            with svc.admission_slot():
+                pass
+        except Exception as e:                       # ColdStartRejected
+            retry_after = getattr(e, "retry_after_s", 0.0)
+            shed_ok = True
+        if not shed_ok:
+            fail("open breaker admitted a cold start (no brownout shed)")
+    fstore.set_fault(OriginFaultPlan.healthy())      # the outage ends
+    th.join(JOIN_TIMEOUT_S)
+    if th.is_alive():
+        fail("restore deadlocked across the breaker-open window")
+        return {"deadlocked": True}
+    if "err" in out:
+        fail(f"restore did not survive the outage: {out['err']!r}")
+    elif any(not np.array_equal(out["flat"][n], oracle[n]) for n in oracle):
+        fail("breaker-phase restore bytes diverged from the oracle")
+    closed = _wait_for(lambda: svc.breaker.state == "closed", timeout_s=5.0)
+    if not closed:
+        fail(f"breaker failed to close after the origin healed "
+             f"(state={svc.breaker.state})")
+    after = COUNTERS.snapshot()
+    svc.close()
+    return {
+        "cooldown_s": cooldown_s,
+        "opened": _delta(before, after, "breaker.opened"),
+        "half_opens": _delta(before, after, "breaker.half_opens"),
+        "probes": _delta(before, after, "breaker.probes"),
+        "closed": _delta(before, after, "breaker.closed"),
+        "origin_shed": _delta(before, after, "breaker.shed"),
+        "coldstarts_shed": _delta(before, after, "serve.brownout_shed"),
+        "shed_retry_after_s": retry_after,
+        "retry_backoff_s": _delta(before, after, "retry.backoff_s"),
+        "recovered_state": "closed" if closed else "not-closed",
+        "byte_identical": "flat" in out,
+    }
+
+
+def baseline_phase(raw_store, blob, oracle, failures=None) -> dict:
+    """All-defaults-off guarantee: a healthy FaultyStore wrap + default
+    ServiceConfig must be bit-transparent AND move no resilience
+    counter — so existing BENCH_e2e.json baselines cannot shift."""
+    fstore = FaultyStore(raw_store)                  # healthy plan
+    svc = ImageService(fstore, ServiceConfig(
+        l1_bytes=16 << 20, l2_nodes=0, fetch_concurrency=0,
+        max_coldstarts=0))
+    before = COUNTERS.snapshot()
+    flat = svc.open(blob, TENANT_KEY).restore_tree(
+        policy=ReadPolicy(mode="streamed", parallelism=PARALLELISM))
+    after = COUNTERS.snapshot()
+    svc.close()
+    identical = all(np.array_equal(flat[n], oracle[n]) for n in oracle)
+    moved = {k: after.get(k, 0.0) - before.get(k, 0.0)
+             for k in set(before) | set(after)
+             if ("retry." in k or "breaker." in k or "faults." in k
+                 or "brownout" in k)
+             and after.get(k, 0.0) != before.get(k, 0.0)}
+
+    def fail(msg):
+        if failures is not None:
+            failures.append(msg)
+        else:
+            raise AssertionError(msg)
+
+    if not identical:
+        fail("defaults-off restore through FaultyStore(healthy) changed "
+             "bytes")
+    if moved:
+        fail(f"defaults-off run moved resilience counters: {moved}")
+    return {"byte_identical": identical,
+            "resilience_counters_moved": dict(moved)}
+
+
+def run() -> list:
+    from benchmarks.decode_kernels import merge_bench_json
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-chaos-"))
+    gc = GenerationalGC(store)
+    chunks = 100
+    tree, blob, stats = _build_image(store, gc.active, chunks=chunks)
+    oracle = ImageReader(blob, TENANT_KEY, store).restore_tree(batched=False)
+    for n in tree:
+        assert np.array_equal(oracle[n], np.asarray(tree[n])), n
+
+    baseline = baseline_phase(store, blob, oracle)
+    matrix = matrix_phase(store, blob, oracle, trials=5, chunks=chunks)
+    breaker = breaker_phase(store, blob, oracle)
+
+    merge_bench_json({"chaos_matrix": {
+        "matrix": matrix, "breaker": breaker, "baseline": baseline}})
+
+    return [
+        dict(name="chaos.matrix_restore_p99_ms",
+             value=matrix["restore_p99_ms"],
+             derived=f"{matrix['trials']}x{chunks}-chunk streamed restores "
+                     f"with poisoned L1 ({matrix['poisoned_l1_entries']} "
+                     f"entries), crashed peer, blackholed L2 node, flaky "
+                     f"origin (10% transient / 1% corrupt): byte-identical, "
+                     f"{matrix['unrecovered_failures']:.0f} unrecovered; "
+                     f"{matrix['retry_retries']:.0f} retries absorbed "
+                     f"{matrix['injected_transient']:.0f} transient + "
+                     f"{matrix['injected_corrupt']:.0f} corrupt injections "
+                     f"({matrix['integrity_refetches']:.0f} integrity "
+                     f"refetch rounds); L2 hit rate "
+                     f"{matrix['l2_hit_rate']:.3f}"),
+        dict(name="chaos.breaker_recovery_closed",
+             value=float(breaker["closed"] >= 1),
+             derived=f"full origin outage: breaker opened "
+                     f"{breaker['opened']:.0f}x, shed "
+                     f"{breaker['origin_shed']:.0f} origin calls + "
+                     f"{breaker['coldstarts_shed']:.0f} cold starts "
+                     f"(retry-after {breaker['shed_retry_after_s']:.2f}s), "
+                     f"then healed: {breaker['probes']:.0f} half-open "
+                     f"probes -> closed {breaker['closed']:.0f}x, restore "
+                     f"byte-identical"),
+        dict(name="chaos.baseline_counters_moved",
+             value=float(len(baseline["resilience_counters_moved"])),
+             derived="defaults-off run (healthy wrap, no retry/breaker): "
+                     "byte-identical, zero retry.*/breaker.*/faults.* "
+                     "movement — existing baselines untouched"),
+    ]
+
+
+def smoke(chunks: int = 32) -> None:
+    """Fast tier-1 gate (scripts/test.sh, make verify): the full
+    three-phase chaos story at reduced scale; HARD-FAIL (non-zero exit)
+    on any byte divergence, unrecovered failure, deadlock, missed
+    breaker transition, or baseline counter movement."""
+    import sys
+
+    store = ChunkStore(tempfile.mkdtemp(prefix="repro-chaos-smoke-"))
+    gc = GenerationalGC(store)
+    tree, blob, stats = _build_image(store, gc.active, chunks=chunks,
+                                     chunk_size=4096)
+    oracle = ImageReader(blob, TENANT_KEY, store).restore_tree(batched=False)
+
+    failures: list = []
+    baseline = baseline_phase(store, blob, oracle, failures=failures)
+    matrix = matrix_phase(store, blob, oracle, trials=2, poison=3,
+                          chunks=chunks, failures=failures)
+    breaker = breaker_phase(store, blob, oracle, cooldown_s=0.2,
+                            failures=failures)
+    if matrix["restore_p99_ms"] > 30_000:
+        failures.append(f"chaos restore p99 unbounded: "
+                        f"{matrix['restore_p99_ms']:.0f}ms")
+    if failures:
+        print("CHAOS MATRIX SMOKE REGRESSION:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print(f"CHAOS MATRIX OK: {chunks}-chunk streamed restores "
+          f"byte-identical under poisoned L1 + crashed peer + blackholed "
+          f"L2 node + flaky origin ({matrix['retry_retries']:.0f} retries, "
+          f"{matrix['integrity_refetches']:.0f} integrity refetches, p99 "
+          f"{matrix['restore_p99_ms']:.0f}ms); breaker opened "
+          f"{breaker['opened']:.0f}x, shed {breaker['coldstarts_shed']:.0f} "
+          f"cold starts, recovered {breaker['recovered_state']}; "
+          f"defaults-off moved 0 resilience counters")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast cross-tier chaos gate (tier-1)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['value']:.6g},\"{row['derived']}\"")

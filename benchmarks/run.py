@@ -14,6 +14,9 @@ BENCHES = [
     ("e2e_read_latency", "Fig 11 end-to-end read modes"),
     ("fault_injection", "§4 resilience: mid-restore faults, hedged GETs, "
                         "100-tenant Zipf"),
+    ("chaos_matrix", "cross-tier chaos: poisoned L1 + crashed peer + "
+                     "blackholed L2 node + flaky origin, breaker "
+                     "recovery, defaults-off baseline"),
     ("decode_kernels", "per-backend keystream/verify GB/s (registry)"),
     ("coldstart_storm", "peer provisioning tier: 1->100 worker "
                         "cold-start storm"),

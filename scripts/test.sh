@@ -59,6 +59,18 @@ if [ "$#" -eq 0 ]; then
         echo "FAIL: fault-injection smoke regression (see above)" >&2
         exit 1
     fi
+    # cross-tier chaos gate: poisoned L1 + crashed peer + blackholed L2
+    # node + flaky origin must restore byte-identical with zero
+    # unrecovered failures; a full origin outage must trip the breaker,
+    # shed cold starts with a retry-after, and recover to closed; and an
+    # all-defaults-off run must move ZERO resilience counters (the
+    # BENCH_e2e.json-baselines-unchanged fast-fail)
+    if ! env "${JAX_CACHE_ENV[@]}" \
+        PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/chaos_matrix.py --smoke; then
+        echo "FAIL: chaos matrix smoke regression (see above)" >&2
+        exit 1
+    fi
     # cold-start-storm gate: a worker fleet storming one image through
     # the peer tier must stay byte-identical to the serial oracle (with
     # and without a peer crashed mid-transfer) and keep origin GETs

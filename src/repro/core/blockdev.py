@@ -89,6 +89,7 @@ from repro.core.crypto import aes, convergent
 from repro.core.decode import BatchDecoder
 from repro.core.layout import ranges_to_chunks
 from repro.core.manifest import ZERO_CHUNK, Manifest
+from repro.core.retry import BreakerOpenError, is_retryable
 from repro.core.telemetry import COUNTERS, LatencyRecorder
 
 PAGE = 4096
@@ -181,7 +182,7 @@ class TieredReader:
                  l1=None, l2=None, concurrency=None,
                  origin_delay_s: float = 0.0, decoder: BatchDecoder | None = None,
                  counters=None, flights: FlightTable | None = None,
-                 peer=None, pins=None):
+                 peer=None, pins=None, retry=None, breaker=None):
         self.m = manifest
         self.store = store
         self.root = root or manifest.root_id
@@ -222,6 +223,17 @@ class TieredReader:
         l2_params = inspect.signature(l2_get).parameters if l2_get else {}
         self._l2_streams = "on_ready" in l2_params
         self._l2_hedges = "hedge" in l2_params
+        # origin resilience (``core.retry``): `retry` is a RetryPolicy
+        # wrapped around every origin GET (and around integrity-failure
+        # evict+refetch rounds); `breaker` is a service-wide
+        # CircuitBreaker gating origin probes (open = reads prefer
+        # peer/L2 and back off; half-open = bounded probes). Both None
+        # by default — the no-knobs path is byte-for-byte the old one.
+        self.retry = retry
+        self.breaker = breaker
+        store_get = getattr(store, "get_chunk", None)
+        self._store_deadlines = store_get is not None and \
+            "deadline_s" in inspect.signature(store_get).parameters
 
     def _pin(self):
         """Pin this reader's root for the duration of a read (no-op
@@ -233,6 +245,50 @@ class TieredReader:
         return self.pins.pin(self.root)
 
     # ------------------------------------------------------------- chunks
+    def _origin_get(self, name: str) -> bytes:
+        """ONE origin chunk GET with the resilience ladder applied:
+        breaker gate (open = shed; half-open = bounded probes), bounded
+        limiter, per-attempt deadline (forwarded to deadline-capable
+        stores), and — when a ``RetryPolicy`` is wired — backoff retries
+        of transient failures. Breaker accounting only sees *retryable*
+        outcomes: a ``FileNotFoundError`` is a bug, not origin weather,
+        and must not open the breaker."""
+        def attempt() -> bytes:
+            br = self.breaker
+            if br is not None and not br.allow():
+                raise BreakerOpenError(br.retry_after_s())
+            limiter = self.concurrency if self.concurrency is not None \
+                else contextlib.nullcontext()
+            kw = {}
+            if self._store_deadlines and self.retry is not None and \
+                    self.retry.attempt_timeout_s is not None:
+                kw["deadline_s"] = self.retry.attempt_timeout_s
+            try:
+                with limiter:
+                    if self.origin_delay_s > 0:
+                        time.sleep(self.origin_delay_s)
+                    ct = self.store.get_chunk(self.root, name, **kw)
+            except BreakerOpenError:
+                raise
+            except Exception as e:
+                if br is not None and is_retryable(e):
+                    br.record_failure()
+                raise
+            if br is not None:
+                br.record_success()
+            return ct
+
+        if self.retry is None:
+            return attempt()
+        return self.retry.call(attempt, counters=self.counters)
+
+    def _integrity_attempts(self) -> int:
+        """Total decode attempts per read: 1 (today's behavior) plus the
+        retry policy's evict+refetch budget for integrity failures."""
+        if self.retry is None:
+            return 1
+        return 1 + max(0, int(self.retry.integrity_refetches))
+
     def _fetch_cipher(self, ref) -> tuple[bytes, float]:
         """(ciphertext, simulated latency) of `ref` via L2 -> origin,
         single-flighted by chunk name. L1 is probed by callers."""
@@ -280,12 +336,7 @@ class TieredReader:
                     if self.l1 is not None:
                         self.l1.put(ref.name, ct)
             if ct is None:
-                limiter = self.concurrency if self.concurrency is not None \
-                    else contextlib.nullcontext()
-                with limiter:
-                    if self.origin_delay_s > 0:
-                        time.sleep(self.origin_delay_s)
-                    ct = self.store.get_chunk(self.root, ref.name)
+                ct = self._origin_get(ref.name)
                 lat += ORIGIN_LAT_S
                 src = "origin"
                 self.counters.inc("read.origin_fetches")
@@ -315,25 +366,40 @@ class TieredReader:
 
     @_pinned
     def fetch_chunk(self, index: int) -> bytes:
-        """Plaintext of chunk `index`, via the cache hierarchy (serial)."""
+        """Plaintext of chunk `index`, via the cache hierarchy (serial).
+
+        On an integrity failure the bad name is evicted from EVERY tier
+        — including the peer mesh directory, so later joiners don't
+        re-fetch a poisoned holder copy — and, with a retry policy
+        wired, refetched fresh from origin (bounded rounds) instead of
+        failing the read."""
         ref = self._refs[index]
         cs = self.m.chunk_size
         if ref.name == ZERO_CHUNK:
             self.counters.inc("read.zero_chunks")
             return b"\x00" * cs
-        lat = 0.0
-        ct = None
-        if self.l1 is not None:
-            ct = self.l1.get(ref.name)
-            lat += L1_PROBE_S
-            if ct is not None:
-                self.counters.inc("read.l1_hits")
-        if ct is None:
-            ct, fetch_lat = self._fetch_cipher(ref)
-            lat += fetch_lat
-        plain = convergent.decrypt_chunk(ct, ref.key, ref.sha256)
-        self.read_lat.record(lat)
-        return plain
+        attempts = self._integrity_attempts()
+        for round_ in range(attempts):
+            lat = 0.0
+            ct = None
+            if self.l1 is not None:
+                ct = self.l1.get(ref.name)
+                lat += L1_PROBE_S
+                if ct is not None:
+                    self.counters.inc("read.l1_hits")
+            if ct is None:
+                ct, fetch_lat = self._fetch_cipher(ref)
+                lat += fetch_lat
+            try:
+                plain = convergent.decrypt_chunk(ct, ref.key, ref.sha256)
+            except convergent.IntegrityError:
+                self._invalidate_name(ref.name)
+                if round_ == attempts - 1:
+                    raise
+                self.counters.inc("retry.integrity_refetches")
+                continue
+            self.read_lat.record(lat)
+            return plain
 
     # ------------------------------------------------- stage F: fetch I/O
     @_pinned
@@ -566,12 +632,7 @@ class TieredReader:
         for their waiters, and only never-started names inherit the
         first error. Raises the first error after the stage drains."""
         def fetch_origin(name: str):
-            limiter = self.concurrency if self.concurrency is not None \
-                else contextlib.nullcontext()
-            with limiter:
-                if self.origin_delay_s > 0:
-                    time.sleep(self.origin_delay_s)
-                ct = self.store.get_chunk(self.root, name)
+            ct = self._origin_get(name)
             self.counters.inc("read.origin_fetches")
             if self.l2 is not None:
                 self.l2.put_chunk(name, ct)
@@ -633,18 +694,24 @@ class TieredReader:
             raise first_err
 
     # ------------------------------------------------- stage F + stage D
+    def _invalidate_name(self, name: str):
+        """Evict one tamper-flagged chunk name from every cache tier:
+        the L1 entry, the L2 stripes, AND the peer mesh (directory entry
+        plus every holder's serving copy — so later joiners don't
+        re-fetch the poisoned copy peer-to-peer)."""
+        for tier in (self.l1, self.l2, self.peer):
+            inv = getattr(tier, "invalidate", None) if tier is not None \
+                else None
+            if inv is not None:
+                inv(name)
+
     def _invalidate_bad(self, err: convergent.IntegrityError):
         """Evict tamper-flagged chunk names from every cache tier (L1
         entry, L2 stripes, peer directory + holder copies) so a retry
         refetches from origin instead of replaying the bad ciphertext."""
-        invalidators = [getattr(tier, "invalidate", None)
-                        for tier in (self.l1, self.l2, self.peer)
-                        if tier is not None]
-        invalidators = [inv for inv in invalidators if inv is not None]
         for name in err.bad_positions:
             if isinstance(name, str):
-                for inv in invalidators:
-                    inv(name)
+                self._invalidate_name(name)
 
     @_pinned
     def fetch_chunks(self, indices, parallelism: int = DEFAULT_PARALLELISM,
@@ -677,6 +744,24 @@ class TieredReader:
         if streamed:
             return self._prefetch_streamed(indices, parallelism, queue_depth,
                                            l2_hedge)
+        attempts = self._integrity_attempts()
+        for round_ in range(attempts):
+            try:
+                return self._fetch_chunks_staged(indices, parallelism,
+                                                 materialize, decoder,
+                                                 l2_hedge)
+            except convergent.IntegrityError:
+                # bad names were evicted from every tier by the staged
+                # body; a fresh round refetches only them from origin
+                # (the good names are warm L1 hits)
+                if round_ == attempts - 1:
+                    raise
+                self.counters.inc("retry.integrity_refetches")
+
+    def _fetch_chunks_staged(self, indices, parallelism: int,
+                             materialize: bool,
+                             decoder: BatchDecoder | None = None,
+                             l2_hedge: bool | None = None) -> dict:
         dec = decoder if decoder is not None else self.decoder
         t0 = time.perf_counter()
         fb = self.fetch_ciphertexts(indices, parallelism, l2_hedge=l2_hedge)
@@ -783,10 +868,29 @@ class TieredReader:
         tiles while fetch is still in flight. {index: plaintext},
         byte-identical to the staged mode.
 
+        An ``IntegrityError`` mid-stream evicts the bad names from
+        every tier and — with a retry policy wired — restarts the read
+        (bounded rounds): the restart's good names are warm L1 hits,
+        only the evicted bad names travel to origin again.
+
         ``last_batch`` additionally reports ``overlap_s`` (decode work
         hidden under the fetch wall), ``overlap_fraction``, and the
         queue's high-water mark; the same figures feed the
         ``decode.overlap_s`` / ``stream.queue_hwm`` counters."""
+        attempts = self._integrity_attempts()
+        for round_ in range(attempts):
+            try:
+                return self._fetch_chunks_streamed_once(
+                    indices, parallelism, queue_depth, decoder, l2_hedge)
+            except convergent.IntegrityError:
+                if round_ == attempts - 1:
+                    raise
+                self.counters.inc("retry.integrity_refetches")
+
+    def _fetch_chunks_streamed_once(self, indices, parallelism: int,
+                                    queue_depth: int,
+                                    decoder: BatchDecoder | None = None,
+                                    l2_hedge: bool | None = None) -> dict:
         dec = decoder if decoder is not None else self.decoder
         t0 = time.perf_counter()
         refs_by_name: dict[str, object] = {}

@@ -176,6 +176,15 @@ class RejectingLimiter:
             self.admitted += 1
             return True
 
+    def shed(self):
+        """Count a rejection decided *above* the limiter (e.g. the
+        service's breaker-open brownout sheds before ever trying to
+        acquire a slot), so ``rejected`` stays the one number for
+        "arrivals turned away"."""
+        with self._lock:
+            self.rejected += 1
+            COUNTERS.inc("limiter.rejected")
+
     def release(self):
         # clamp at zero: a double-release (finally-block running after a
         # failed try_acquire path, say) must not drive inflight negative

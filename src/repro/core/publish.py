@@ -42,9 +42,11 @@ single-flighted copies).
 from __future__ import annotations
 
 import hashlib
+import os
 import threading
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
@@ -105,12 +107,56 @@ class NameIndex:
     ciphertext name is global (no per-root scoping needed; roots only
     gate *presence*, which ``has_chunks`` probes separately). This is
     what lets successive training checkpoints publish their unchanged
-    tensors without encrypting a single byte of them."""
+    tensors without encrypting a single byte of them.
 
-    def __init__(self, cap: int = 1 << 20):
+    With a ``path``, the index persists to a sidecar file: loaded at
+    construction, saved atomically (temp + ``os.replace``) by
+    ``save()`` — ``PublishPipeline.publish`` calls it after each
+    publish — so skip-encryption dedup survives process restarts. The
+    sidecar is a pure cache: a corrupt or missing file only costs
+    re-encryption (never correctness), so load errors start empty
+    instead of failing."""
+
+    def __init__(self, cap: int = 1 << 20, path=None):
         self.cap = cap
+        self.path = Path(path) if path is not None else None
         self._map: dict[bytes, str] = {}
         self._lock = threading.Lock()
+        if self.path is not None:
+            self._load()
+
+    def _load(self):
+        try:
+            raw = self.path.read_text()
+        except OSError:
+            return
+        loaded: dict[bytes, str] = {}
+        try:
+            for line in raw.splitlines():
+                k, _, name = line.partition(" ")
+                if k and name:
+                    loaded[bytes.fromhex(k)] = name
+        except ValueError:
+            COUNTERS.inc("publish.name_index_load_errors")
+            return
+        self._map.update(loaded)
+        COUNTERS.add("publish.name_index_loaded", len(loaded))
+
+    def save(self):
+        """Atomic sidecar write (no-op without a path). Concurrent
+        publishers may race saves; each writes a consistent snapshot
+        and ``os.replace`` keeps the file whole either way."""
+        if self.path is None:
+            return
+        with self._lock:
+            items = list(self._map.items())
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_name(
+            self.path.name + ".tmp-%d" % threading.get_ident())
+        with open(tmp, "w") as f:
+            f.write("".join(f"{k.hex()} {v}\n" for k, v in items))
+        os.replace(tmp, self.path)
+        COUNTERS.inc("publish.name_index_saves")
 
     def get_many(self, keys: list) -> list:
         with self._lock:
@@ -183,14 +229,22 @@ class PublishPipeline:
                  upload_parallelism: int = DEFAULT_UPLOAD_PARALLELISM,
                  l1=None, peer=None, refcounts=None,
                  name_index: NameIndex | None = None,
-                 flights: UploadFlights | None = None, counters=None):
+                 name_index_path=None,
+                 flights: UploadFlights | None = None, counters=None,
+                 retry=None):
         self.store = store
         self.decoder = BatchDecoder(backend, max_batch_bytes=tile_bytes)
         self.upload_parallelism = max(1, int(upload_parallelism))
         self.l1 = l1
         self.peer = peer
         self.refcounts = refcounts
-        self.names = name_index if name_index is not None else NameIndex()
+        # `retry`: a ``core.retry.RetryPolicy`` wrapped around every
+        # origin PUT (transient upload failures back off and re-PUT;
+        # put_if_absent makes the re-PUT idempotent). None = single
+        # attempt, exactly the old behavior.
+        self.retry = retry
+        self.names = name_index if name_index is not None \
+            else NameIndex(path=name_index_path)
         self.flights = flights if flights is not None else UploadFlights()
         self.counters = counters if counters is not None else COUNTERS
         self._pool = LazyPool()
@@ -253,7 +307,8 @@ class PublishPipeline:
                             uploaded)
         self.counters.inc("publish.images_published")
         self.counters.add("publish.wall_s", time.perf_counter() - t0)
-        return blob, stats
+        self.names.save()        # persist skip-encryption dedup (no-op
+        return blob, stats       # without a sidecar path)
 
     def _publish_batch(self, batch: list, salt: bytes, root: str,
                        refs: dict, futures: list) -> int:
@@ -346,7 +401,12 @@ class PublishPipeline:
             # leader failed: take over with our own attempt
         err = None
         try:
-            was_new = self.store.put_if_absent(root, name, ct)
+            if self.retry is None:
+                was_new = self.store.put_if_absent(root, name, ct)
+            else:
+                was_new = self.retry.call(
+                    lambda: self.store.put_if_absent(root, name, ct),
+                    counters=self.counters)
         except BaseException as e:
             err = e
             raise

@@ -72,6 +72,7 @@ from repro.core.layout import (
 )
 from repro.core.manifest import open_manifest
 from repro.core.publish import PublishPipeline
+from repro.core.retry import CircuitBreaker, RetryPolicy
 from repro.core.telemetry import COUNTERS, ScopedCounters
 
 _MODES = ("streamed", "staged", "serial")
@@ -80,7 +81,13 @@ _MODES = ("streamed", "staged", "serial")
 class ColdStartRejected(RuntimeError):
     """Admission control turned the cold start away (paper §4.2: excess
     starts are rejected, not queued, to bound the demand amplification
-    of an empty cache)."""
+    of an empty cache). ``retry_after_s`` > 0 means the brownout ladder
+    shed this start — the origin breaker is open — and tells the caller
+    when the breaker will next accept probes."""
+
+    def __init__(self, msg: str, retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 @dataclass(frozen=True)
@@ -205,6 +212,24 @@ class ServiceConfig:
     publish_tile_bytes: int | str | None = None  # None = backend default
     upload_parallelism: int = 8         # bounded-parallel PUTs per service
     publish_warm_l1: bool = True        # push fresh ciphertexts into L1/peer
+    # sidecar file for the publish NameIndex (skip-encryption dedup
+    # survives restarts); None = in-memory only
+    publish_name_index_path: str | None = None
+    # origin-tier resilience (core.retry / core.faults) — ALL off by
+    # default: the no-knobs read/write path is byte-for-byte the old one
+    retry_attempts: int = 0             # total origin attempts; 0/1 = off
+    retry_base_s: float = 0.01          # backoff floor (decorrelated jitter)
+    retry_cap_s: float = 0.5            # backoff ceiling
+    retry_total_budget_s: float | None = None   # wall budget across attempts
+    retry_attempt_timeout_s: float | None = None  # per-attempt deadline
+    retry_integrity_refetches: int = 2  # evict+refetch rounds on bad bytes
+    retry_seed: int | None = None       # pin the jitter stream (benchmarks)
+    breaker_threshold: float | None = None  # error rate to open; None = off
+    breaker_window: int = 64            # sliding error-rate window size
+    breaker_min_samples: int = 10       # samples before the rate can trip
+    breaker_cooldown_s: float = 1.0     # open -> half-open delay
+    breaker_half_open_probes: int = 1   # concurrent probes while half-open
+    breaker_shed_coldstarts: bool = True  # brownout: shed admissions too
     root: str | None = None             # default root for open()
     default_policy: ReadPolicy = field(default_factory=ReadPolicy)
 
@@ -269,6 +294,24 @@ class ImageService:
             self.admission = RejectingLimiter(cfg.max_coldstarts) \
                 if cfg.max_coldstarts > 0 else None
         self.counters = counters if counters is not None else COUNTERS
+        # origin-tier resilience (defaults off): ONE retry policy and
+        # ONE circuit breaker per service, shared by every reader it
+        # builds and by the publish pipeline — the breaker's error-rate
+        # view must span all of this process's origin traffic
+        self.retry = RetryPolicy(
+            attempts=cfg.retry_attempts, base_s=cfg.retry_base_s,
+            cap_s=cfg.retry_cap_s,
+            total_budget_s=cfg.retry_total_budget_s,
+            attempt_timeout_s=cfg.retry_attempt_timeout_s,
+            integrity_refetches=cfg.retry_integrity_refetches,
+            seed=cfg.retry_seed) if cfg.retry_attempts > 1 else None
+        self.breaker = CircuitBreaker(
+            cfg.breaker_threshold, window=cfg.breaker_window,
+            min_samples=cfg.breaker_min_samples,
+            cooldown_s=cfg.breaker_cooldown_s,
+            half_open_probes=cfg.breaker_half_open_probes,
+            counters=self.counters) \
+            if cfg.breaker_threshold is not None else None
         # ONE single-flight table across every reader this service hands
         # out: a chunk-name stampede from different images/tenants costs
         # one origin fetch process-wide (names are content addresses)
@@ -405,8 +448,23 @@ class ImageService:
     def admission_slot(self):
         """Hold one admission-control slot; raises ``ColdStartRejected``
         when the service is at ``max_coldstarts`` in-flight (§4.2:
-        reject, don't queue)."""
+        reject, don't queue) or — brownout ladder, first rung — when the
+        origin circuit breaker is open: a cold start that would only
+        pile retries onto a failing origin is shed up front with a
+        ``retry_after_s`` hint instead of admitted to fail slowly.
+        Half-open probing is left to in-flight reads (they hold no
+        admission slot), so recovery does not depend on new arrivals."""
+        br = self.breaker
         lim = self.admission
+        if (br is not None and self.config.breaker_shed_coldstarts
+                and br.state == "open"):
+            ra = br.retry_after_s()
+            self.counters.inc("serve.brownout_shed")
+            if lim is not None:
+                lim.shed()
+            raise ColdStartRejected(
+                "cold-start shed: origin breaker open "
+                f"(retry after {ra:.2f}s)", retry_after_s=ra)
         if lim is None:
             yield
             return
@@ -463,7 +521,8 @@ class ImageService:
                 origin_delay_s=self.config.origin_delay_s,
                 decoder=decoder if decoder is not None
                 else self.decoder_for(self.config.default_policy),
-                counters=scope, flights=self.flights, pins=self.pins)
+                counters=scope, flights=self.flights, pins=self.pins,
+                retry=self.retry, breaker=self.breaker)
             if decoder is not None:
                 # a caller-owned decoder makes the session unshareable;
                 # don't pin it in the cache (a fresh decoder per open()
@@ -495,7 +554,9 @@ class ImageService:
                     upload_parallelism=cfg.upload_parallelism,
                     l1=self.l1 if cfg.publish_warm_l1 else None,
                     peer=self.peer if cfg.publish_warm_l1 else None,
-                    refcounts=self.refcounts, counters=self.counters)
+                    refcounts=self.refcounts, counters=self.counters,
+                    retry=self.retry,
+                    name_index_path=cfg.publish_name_index_path)
             return self._publisher
 
     def publish(self, tree, *, tenant: str, tenant_key: bytes,

@@ -20,6 +20,11 @@ class ExpiredRootRead(Exception):
 
 
 class ChunkStore:
+    # test seam: called between the temp write and the atomic
+    # link/replace — a raise here models power loss at the torn-write
+    # point (the temp file survives, the claim never happens)
+    _crash_hook = None
+
     def __init__(self, root_dir, fsync: bool = False):
         self.dir = Path(root_dir)
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -27,6 +32,31 @@ class ChunkStore:
         self._lock = threading.Lock()
         self._alarm_cbs = []
         self.deletion_frozen = False
+        self.scrubbed_tmp = self._scrub_orphans()
+
+    def _scrub_orphans(self) -> int:
+        """Startup torn-write recovery: a crash between the temp create
+        and the atomic link/replace (``put_if_absent`` / ``_write``)
+        leaves ``*.tmp-<tid>`` orphans. They are never addressable —
+        chunk names are content hashes — so any survivor is garbage;
+        scrub them before serving. Content-addressed safety makes this
+        unconditional: a half-written temp can never be mistaken for a
+        chunk, and re-publishing the chunk rewrites it from scratch."""
+        base = self.dir / "roots"
+        if not base.exists():
+            return 0
+        n = 0
+        for pattern in ("*/chunks/*/*.tmp-*", "*/manifests/*.tmp-*",
+                        "*/STATE.tmp-*"):
+            for tmp in base.glob(pattern):
+                try:
+                    tmp.unlink()
+                    n += 1
+                except FileNotFoundError:
+                    pass
+        if n:
+            COUNTERS.add("store.torn_writes_scrubbed", n)
+        return n
 
     # ------------------------------------------------------------ helpers
     def _chunk_path(self, root: str, name: str) -> Path:
@@ -97,6 +127,12 @@ class ChunkStore:
             if self.fsync:
                 f.flush()
                 os.fsync(f.fileno())
+        if self._crash_hook is not None:
+            # simulated power loss: raising HERE (outside the
+            # try/finally) leaves the temp file torn on disk, exactly
+            # like a crash between create and link — the startup scrub
+            # is what recovers it
+            self._crash_hook(tmp)
         try:
             os.link(tmp, path)               # atomic claim: EEXIST if lost
         except FileExistsError:

@@ -124,6 +124,37 @@ class QuantileWindow:
         return float(np.quantile(a, q))
 
 
+class ErrorRateWindow:
+    """Sliding success/failure window — the circuit breaker's error-rate
+    input (``core.retry.CircuitBreaker``). A full-history rate would let
+    an hour-old outage keep the breaker twitchy long after the origin
+    healed; the window answers "how is origin doing *lately*".
+    Thread-safe (fetch pool workers record concurrently)."""
+
+    def __init__(self, maxlen: int = 64):
+        self._dq: deque = deque(maxlen=max(1, int(maxlen)))
+        self._lock = threading.Lock()
+
+    def record(self, ok: bool):
+        with self._lock:
+            self._dq.append(0 if ok else 1)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._dq)
+
+    def error_rate(self) -> float:
+        with self._lock:
+            if not self._dq:
+                return 0.0
+            return sum(self._dq) / len(self._dq)
+
+    def reset(self):
+        """Drop history (a breaker transition starts a fresh regime)."""
+        with self._lock:
+            self._dq.clear()
+
+
 class LatencyRecorder:
     """Collects latency samples; emits percentiles and eCDFs (the paper
     reports eCDFs because summary stats hide multi-modality, §5.1)."""

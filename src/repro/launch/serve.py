@@ -124,6 +124,50 @@ def main():
                     help="idle-queue opportunistic flush: decode the "
                          "partial tile whenever the streamed consumer "
                          "would otherwise block")
+    ap.add_argument("--retry-attempts", type=int, default=0,
+                    help="origin retry policy: attempts per origin "
+                         "GET/PUT before giving up (0/1 = retries off, "
+                         "today's single-attempt behavior)")
+    ap.add_argument("--retry-base-ms", type=float, default=10.0,
+                    help="backoff floor per retry (decorrelated jitter: "
+                         "sleep ~ U[base, prev*3], capped)")
+    ap.add_argument("--retry-cap-ms", type=float, default=500.0,
+                    help="backoff ceiling per retry")
+    ap.add_argument("--retry-budget-ms", type=float, default=None,
+                    help="total wall-clock budget across one call's "
+                         "retries; exhausting it raises the last error "
+                         "(default: unbounded)")
+    ap.add_argument("--retry-attempt-timeout-ms", type=float, default=None,
+                    help="per-attempt origin deadline, forwarded to "
+                         "stores that accept deadline_s (a hung origin "
+                         "read costs this instead of a hang)")
+    ap.add_argument("--breaker-threshold", type=float, default=None,
+                    help="origin circuit breaker: error rate over the "
+                         "sliding window that trips it open, e.g. 0.5 "
+                         "(default: breaker off)")
+    ap.add_argument("--breaker-window", type=int, default=64,
+                    help="breaker sliding window size (origin outcomes)")
+    ap.add_argument("--breaker-min-samples", type=int, default=10,
+                    help="outcomes required in-window before the "
+                         "breaker may trip")
+    ap.add_argument("--breaker-cooldown-ms", type=float, default=1000.0,
+                    help="open -> half-open cooldown; shed cold starts "
+                         "carry it as retry-after")
+    ap.add_argument("--breaker-half-open-probes", type=int, default=1,
+                    help="concurrent origin probes allowed half-open")
+    ap.add_argument("--no-breaker-shed", action="store_true",
+                    help="keep admitting cold starts while the breaker "
+                         "is open (default: shed with retry-after)")
+    ap.add_argument("--origin-fault", default=None, metavar="SPEC",
+                    help="origin fault injection (FaultyStore wrap): "
+                         "'unavailable', or comma k=v pairs of "
+                         "error_p/corrupt_p/delay_ms, e.g. "
+                         "error_p=0.1,corrupt_p=0.01,delay_ms=5")
+    ap.add_argument("--publish-name-index", default=None, metavar="PATH",
+                    help="persist the publish-path plaintext-hash -> "
+                         "chunk-name cache to this sidecar file (loaded "
+                         "on start, atomically saved after publish), so "
+                         "re-publishes skip encryption across processes")
     args = ap.parse_args()
 
     if args.jax_compile_cache:
@@ -194,7 +238,35 @@ def main():
         root=root,
         upload_parallelism=args.upload_parallelism,
         default_policy=policy,
+        retry_attempts=args.retry_attempts,
+        retry_base_s=args.retry_base_ms / 1e3,
+        retry_cap_s=args.retry_cap_ms / 1e3,
+        retry_total_budget_s=(args.retry_budget_ms / 1e3
+                              if args.retry_budget_ms is not None else None),
+        retry_attempt_timeout_s=(args.retry_attempt_timeout_ms / 1e3
+                                 if args.retry_attempt_timeout_ms is not None
+                                 else None),
+        breaker_threshold=args.breaker_threshold,
+        breaker_window=args.breaker_window,
+        breaker_min_samples=args.breaker_min_samples,
+        breaker_cooldown_s=args.breaker_cooldown_ms / 1e3,
+        breaker_half_open_probes=args.breaker_half_open_probes,
+        breaker_shed_coldstarts=not args.no_breaker_shed,
+        publish_name_index_path=args.publish_name_index,
     )
+    if args.origin_fault:
+        from repro.core.faults import FaultyStore, OriginFaultPlan
+        if args.origin_fault.strip() == "unavailable":
+            plan = OriginFaultPlan.unavailable()
+        else:
+            kv = dict(p.split("=", 1)
+                      for p in args.origin_fault.split(",") if p)
+            plan = OriginFaultPlan.flaky(
+                error_p=float(kv.get("error_p", 0.0)),
+                corrupt_p=float(kv.get("corrupt_p", 0.0)),
+                delay_s=float(kv.get("delay_ms", 0.0)) / 1e3)
+        store = FaultyStore(store, plan)
+        print(f"origin fault injection: {plan}")
     if args.max_batch_bytes is not None:
         svc_cfg.max_batch_bytes = args.max_batch_bytes
     if args.eager_min_bytes is not None:

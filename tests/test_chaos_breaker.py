@@ -1,0 +1,206 @@
+"""Circuit breaker + brownout ladder: the breaker state machine under
+an injected clock (trip threshold, half-open single-probe discipline,
+probe-success close, probe-failure re-open), admission-control brownout
+shedding with retry-after, and a mini outage->heal restore where the
+in-flight reader's retries become the half-open probes."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultyStore, OriginFaultPlan
+from repro.core.loader import create_image
+from repro.core.retry import BreakerOpenError, CircuitBreaker
+from repro.core.service import (ColdStartRejected, ImageService, ReadPolicy,
+                                ServiceConfig)
+from repro.core.gc import GenerationalGC
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS, Counters
+
+KEY = b"B" * 32
+CS = 4096
+
+
+def _mk_breaker(**kw):
+    clk = {"t": 0.0}
+    cnt = Counters()
+    defaults = dict(window=8, min_samples=4, cooldown_s=1.0,
+                    half_open_probes=1)
+    defaults.update(kw)
+    br = CircuitBreaker(0.5, counters=cnt, clock=lambda: clk["t"],
+                        **defaults)
+    return br, clk, cnt
+
+
+# ------------------------------------------------------- state machine
+def test_breaker_trips_at_threshold_not_before():
+    br, _clk, cnt = _mk_breaker()
+    for _ in range(3):                 # 3 < min_samples: can't trip yet
+        br.record_failure()
+    assert br.state == "closed" and br.allow()
+    br.record_failure()                # 4/4 failures >= 50%
+    assert br.state == "open"
+    assert not br.allow()
+    assert cnt.get("breaker.opened") == 1
+    assert cnt.get("breaker.shed") == 1
+
+
+def test_breaker_ignores_low_error_rate():
+    br, _clk, _cnt = _mk_breaker()
+    for _ in range(8):
+        br.record_success()
+        br.record_success()
+        br.record_failure()            # 33% < 50% threshold
+    assert br.state == "closed" and br.allow()
+
+
+def test_half_open_admits_exactly_one_probe():
+    br, clk, cnt = _mk_breaker()
+    for _ in range(4):
+        br.record_failure()
+    assert br.retry_after_s() == pytest.approx(1.0)
+    clk["t"] = 0.4
+    assert not br.allow() and br.retry_after_s() == pytest.approx(0.6)
+    clk["t"] = 1.0                     # cooldown elapsed
+    assert br.allow()                  # the single probe
+    assert not br.allow()              # second concurrent caller: shed
+    assert br.state == "half_open"
+    br.record_success()                # probe wins
+    assert br.state == "closed" and br.allow()
+    assert cnt.get("breaker.half_opens") == 1
+    assert cnt.get("breaker.probes") == 1
+    assert cnt.get("breaker.closed") == 1
+
+
+def test_half_open_probe_failure_reopens():
+    br, clk, cnt = _mk_breaker()
+    for _ in range(4):
+        br.record_failure()
+    clk["t"] = 1.0
+    assert br.allow()
+    br.record_failure()                # the probe fails
+    assert br.state == "open"
+    assert br.retry_after_s() == pytest.approx(1.0)   # fresh cooldown
+    assert cnt.get("breaker.opened") == 2
+    clk["t"] = 2.0                     # heal: second probe succeeds
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed"
+
+
+def test_idle_open_breaker_reports_half_open_after_cooldown():
+    """The cooldown transition must not depend on read traffic driving
+    allow(): admission control polls `state` alone."""
+    br, clk, _cnt = _mk_breaker()
+    for _ in range(4):
+        br.record_failure()
+    clk["t"] = 5.0
+    assert br.state == "half_open"     # no allow() call needed
+
+
+# ---------------------------------------------------------- brownout
+def _image_service(store, **cfg_kw):
+    base = dict(l1_bytes=0, l2_nodes=0, fetch_concurrency=0,
+                max_coldstarts=2)
+    base.update(cfg_kw)
+    return ImageService(store, ServiceConfig(**base))
+
+
+def test_brownout_sheds_coldstarts_with_retry_after(tmp_path):
+    store = ChunkStore(tmp_path / "store")
+    svc = _image_service(store, breaker_threshold=0.5,
+                         breaker_min_samples=2, breaker_window=8,
+                         breaker_cooldown_s=0.05)
+    before = COUNTERS.snapshot()
+    for _ in range(3):
+        svc.breaker.record_failure()
+    assert svc.breaker.state == "open"
+    with pytest.raises(ColdStartRejected) as ei:
+        with svc.admission_slot():
+            pass
+    assert ei.value.retry_after_s > 0
+    after = COUNTERS.snapshot()
+    assert after.get("serve.brownout_shed", 0) - \
+        before.get("serve.brownout_shed", 0) == 1
+    assert after.get("limiter.rejected", 0) - \
+        before.get("limiter.rejected", 0) == 1
+    assert svc.admission.rejected == 1
+    time.sleep(0.06)                   # cooldown elapses -> half-open
+    with svc.admission_slot():         # admitted again, no raise
+        pass
+
+
+def test_brownout_shed_can_be_disabled(tmp_path):
+    store = ChunkStore(tmp_path / "store")
+    svc = _image_service(store, breaker_threshold=0.5,
+                         breaker_min_samples=2, breaker_cooldown_s=60.0,
+                         breaker_shed_coldstarts=False)
+    for _ in range(3):
+        svc.breaker.record_failure()
+    assert svc.breaker.state == "open"
+    with svc.admission_slot():         # knob off: still admitted
+        pass
+
+
+def test_defaults_build_no_breaker_or_retry(tmp_path):
+    svc = _image_service(ChunkStore(tmp_path / "store"))
+    assert svc.breaker is None and svc.retry is None
+
+
+# ------------------------------------------------- outage -> heal e2e
+def test_outage_heal_restore_with_breaker(tmp_path):
+    """Full origin outage mid-restore: the breaker trips open (shedding
+    further origin calls), the origin heals, an in-flight retry becomes
+    the half-open probe, the breaker closes, and the restore completes
+    byte-identical."""
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(4)
+    tree = {"w": rng.standard_normal((8 * CS // 4,)).astype(np.float32)}
+    blob, _stats = create_image(tree, tenant="brk", tenant_key=KEY,
+                                store=store, root=gc.active, chunk_size=CS)
+    fstore = FaultyStore(store, OriginFaultPlan.unavailable())
+    svc = _image_service(fstore, retry_attempts=80, retry_base_s=1e-3,
+                         retry_cap_s=0.02, retry_seed=3,
+                         breaker_threshold=0.5, breaker_window=8,
+                         breaker_min_samples=3, breaker_cooldown_s=0.1)
+    h = svc.open(blob, KEY)
+    before = COUNTERS.snapshot()
+    out = {}
+
+    def body():
+        try:
+            out["flat"] = h.restore_tree(policy=ReadPolicy(
+                mode="streamed", parallelism=4))
+        except BaseException as e:     # surfaced below
+            out["err"] = e
+
+    th = threading.Thread(target=body, daemon=True)
+    th.start()
+    deadline = time.perf_counter() + 10.0
+    while svc.breaker.state != "open" and time.perf_counter() < deadline:
+        time.sleep(0.002)
+    assert svc.breaker.state == "open"
+    fstore.set_fault(OriginFaultPlan.healthy())
+    th.join(30.0)
+    assert not th.is_alive(), "restore deadlocked across the outage"
+    assert "err" not in out, f"restore failed: {out.get('err')!r}"
+    assert np.array_equal(out["flat"]["w"], tree["w"])
+    deadline = time.perf_counter() + 5.0
+    while svc.breaker.state != "closed" and time.perf_counter() < deadline:
+        time.sleep(0.002)
+    assert svc.breaker.state == "closed"
+    after = COUNTERS.snapshot()
+
+    def delta(name):
+        return after.get(name, 0.0) - before.get(name, 0.0)
+
+    assert delta("breaker.opened") >= 1
+    assert delta("breaker.closed") >= 1
+    assert delta("breaker.shed") >= 1      # open window really shed load
+
+
+def test_breaker_open_error_is_retryable_with_hint():
+    e = BreakerOpenError(0.7)
+    assert e.retryable and e.retry_after_s == pytest.approx(0.7)

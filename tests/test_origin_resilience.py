@@ -1,0 +1,368 @@
+"""Origin-tier resilience: RetryPolicy jitter/budget semantics, the
+zero-budget byte-for-byte guarantee, transient-error and corrupt-read
+recovery through the tiered reader (serial AND streamed), per-attempt
+deadlines, single-flighted retry storms, upload-path retries,
+torn-write scrubbing, the NameIndex sidecar, and poisoned-peer
+deregistration."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.crypto import convergent
+from repro.core.faults import (FaultyStore, OriginFaultPlan,
+                               StoreTimeoutError, TransientStoreError)
+from repro.core.gc import GenerationalGC
+from repro.core.loader import create_image
+from repro.core.publish import NameIndex, PublishPipeline
+from repro.core.retry import BreakerOpenError, RetryPolicy, is_retryable
+from repro.core.service import (ImageService, ReadPolicy, ServiceConfig,
+                                build_peer_mesh)
+from repro.core.store import ChunkStore
+from repro.core.telemetry import COUNTERS, Counters
+
+KEY = b"R" * 32
+CS = 4096
+
+
+def _image(store, root, *, chunks=6, seed=0):
+    rng = np.random.default_rng(seed)
+    tree = {"w": rng.standard_normal(
+        (chunks * CS // 4,)).astype(np.float32)}
+    blob, _stats = create_image(tree, tenant="res", tenant_key=KEY,
+                                store=store, root=root, chunk_size=CS)
+    return tree, blob
+
+
+def _mk(tmp_path, chunks=6):
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    tree, blob = _image(store, gc.active, chunks=chunks)
+    return store, gc.active, tree, blob
+
+
+def _svc(store, **cfg_kw):
+    base = dict(l1_bytes=0, l2_nodes=0, fetch_concurrency=0,
+                max_coldstarts=0)
+    base.update(cfg_kw)
+    return ImageService(store, ServiceConfig(**base))
+
+
+_FAST_RETRY = dict(retry_attempts=4, retry_base_s=1e-4, retry_cap_s=1e-3,
+                   retry_seed=1)
+
+
+def _flip(data: bytes, pos: int = 0) -> bytes:
+    return data[:pos] + bytes([data[pos] ^ 0xFF]) + data[pos + 1:]
+
+
+# --------------------------------------------------------- RetryPolicy
+def test_jitter_stays_within_base_and_cap():
+    p = RetryPolicy(attempts=5, base_s=0.01, cap_s=0.05, seed=42)
+    prev = p.base_s
+    for _ in range(500):
+        d = p.next_backoff(prev)
+        assert p.base_s <= d <= p.cap_s
+        prev = d
+
+
+def test_call_sleeps_are_jitter_bounded():
+    p = RetryPolicy(attempts=6, base_s=0.01, cap_s=0.04, seed=7)
+    sleeps, calls = [], []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 4:
+            raise TransientStoreError("flaky")
+        return "ok"
+
+    assert p.call(fn, counters=Counters(), sleep=sleeps.append) == "ok"
+    assert len(calls) == 4 and len(sleeps) == 3
+    assert all(p.base_s <= s <= p.cap_s for s in sleeps)
+
+
+def test_zero_budget_policy_is_single_attempt():
+    calls = []
+    p = RetryPolicy(attempts=1)
+
+    def fn():
+        calls.append(1)
+        raise TransientStoreError("x")
+
+    with pytest.raises(TransientStoreError):
+        p.call(fn, sleep=lambda s: pytest.fail("zero-budget policy slept"))
+    assert len(calls) == 1
+
+
+def test_zero_budget_restore_byte_identical(tmp_path):
+    """retry_attempts<=1 must be EXACTLY today's read path: the service
+    wires no policy at all, and bytes match the retries-off restore."""
+    store, _root, _tree, blob = _mk(tmp_path)
+    svc_off = _svc(store)
+    svc_one = _svc(store, retry_attempts=1)
+    assert svc_off.retry is None and svc_one.retry is None
+    a = svc_off.open(blob, KEY).restore_tree()
+    b = svc_one.open(blob, KEY).restore_tree()
+    for n in a:
+        assert a[n].tobytes() == b[n].tobytes()
+
+
+def test_nonretryable_errors_fail_fast():
+    assert not is_retryable(FileNotFoundError("missing chunk"))
+    assert is_retryable(TransientStoreError("throttle"))
+    assert is_retryable(TimeoutError())
+    assert is_retryable(BreakerOpenError(0.5))
+    calls = []
+    p = RetryPolicy(attempts=5, base_s=1e-4, cap_s=1e-3)
+
+    def fn():
+        calls.append(1)
+        raise FileNotFoundError("deterministic bug")
+
+    with pytest.raises(FileNotFoundError):
+        p.call(fn, counters=Counters(), sleep=lambda s: None)
+    assert len(calls) == 1
+
+
+def test_total_budget_refuses_next_sleep():
+    cnt = Counters()
+    p = RetryPolicy(attempts=10, base_s=1e-3, cap_s=1e-2, total_budget_s=0.0)
+
+    def fn():
+        raise TransientStoreError("always")
+
+    with pytest.raises(TransientStoreError):
+        p.call(fn, counters=cnt, sleep=lambda s: None)
+    assert cnt.get("retry.attempts") == 1
+    assert cnt.get("retry.budget_exhausted") == 1
+    assert cnt.get("retry.giveups") == 1
+
+
+def test_retry_after_hint_floors_the_backoff():
+    p = RetryPolicy(attempts=2, base_s=1e-4, cap_s=1e-3)
+    sleeps, calls = [], []
+
+    def fn():
+        calls.append(1)
+        if len(calls) == 1:
+            raise BreakerOpenError(0.25)
+        return "ok"
+
+    assert p.call(fn, counters=Counters(), sleep=sleeps.append) == "ok"
+    assert sleeps and sleeps[0] >= 0.25
+
+
+# --------------------------------------------- reader-threaded recovery
+def test_transient_origin_errors_recovered(tmp_path):
+    store, _root, tree, blob = _mk(tmp_path)
+    fstore = FaultyStore(store)
+    fstore.fail_next(2)
+    svc = _svc(fstore, **_FAST_RETRY)
+    before = COUNTERS.get("retry.retries")
+    flat = svc.open(blob, KEY).restore_tree(
+        policy=ReadPolicy(mode="streamed", parallelism=4))
+    assert np.array_equal(flat["w"], tree["w"])
+    assert COUNTERS.get("retry.retries") - before >= 2
+
+
+def test_corrupt_origin_raises_without_retry(tmp_path):
+    store, _root, _tree, blob = _mk(tmp_path)
+    fstore = FaultyStore(store)
+    fstore.corrupt_next(1)
+    svc = _svc(fstore)
+    with pytest.raises(convergent.IntegrityError):
+        svc.open(blob, KEY).restore_tree(policy=ReadPolicy(mode="serial"))
+
+
+@pytest.mark.parametrize("mode", ["serial", "staged", "streamed"])
+def test_corrupt_origin_evicts_and_refetches(tmp_path, mode):
+    store, _root, tree, blob = _mk(tmp_path)
+    fstore = FaultyStore(store)
+    fstore.corrupt_next(1)
+    svc = _svc(fstore, l1_bytes=8 << 20, **_FAST_RETRY)
+    before = COUNTERS.get("retry.integrity_refetches")
+    flat = svc.open(blob, KEY).restore_tree(
+        policy=ReadPolicy(mode=mode, parallelism=4))
+    assert np.array_equal(flat["w"], tree["w"])
+    assert COUNTERS.get("retry.integrity_refetches") - before >= 1
+    # the poisoned ciphertext must not linger: a second restore through
+    # the same (now warm) L1 stays byte-identical
+    flat2 = svc.open(blob, KEY).restore_tree(
+        policy=ReadPolicy(mode=mode, parallelism=4))
+    assert np.array_equal(flat2["w"], tree["w"])
+
+
+def test_attempt_deadline_bounds_slow_origin(tmp_path):
+    """An injected stall past the per-attempt deadline costs the
+    deadline (StoreTimeoutError), not the stall."""
+    store, _root, _tree, blob = _mk(tmp_path, chunks=2)
+    fstore = FaultyStore(store, OriginFaultPlan.slow(delay_s=0.5))
+    svc = _svc(fstore, retry_attempts=2, retry_base_s=1e-4,
+               retry_cap_s=1e-3, retry_attempt_timeout_s=0.005)
+    before = COUNTERS.get("faults.origin_timeouts")
+    t0 = time.perf_counter()
+    with pytest.raises(StoreTimeoutError):
+        svc.open(blob, KEY).restore_tree(policy=ReadPolicy(mode="serial"))
+    assert time.perf_counter() - t0 < 0.5      # never paid the full stall
+    assert COUNTERS.get("faults.origin_timeouts") - before == 2
+
+
+def test_retry_storm_stays_single_flighted(tmp_path):
+    """Concurrent readers of one chunk during an origin hiccup: the
+    leader retries, the rest wait on the flight — origin sees ONE
+    successful GET, not a storm of per-reader retries."""
+    gets = []
+
+    class Counting(ChunkStore):
+        def get_chunk(self, root, name):
+            gets.append(name)
+            return super().get_chunk(root, name)
+
+    store = Counting(tmp_path / "store")
+    gc = GenerationalGC(store)
+    tree, blob = _image(store, gc.active, chunks=2)
+    fstore = FaultyStore(store, OriginFaultPlan.slow(delay_s=0.2))
+    fstore.fail_next(1)
+    svc = _svc(fstore, **_FAST_RETRY)
+    h = svc.open(blob, KEY)
+    before = COUNTERS.get("read.singleflight_dedup")
+    barrier = threading.Barrier(8)
+    results = [None] * 8
+
+    def work(i):
+        barrier.wait()
+        results[i] = h.reader.fetch_chunk(0)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(set(results)) == 1 and results[0] is not None
+    assert results[0] == tree["w"].tobytes()[:CS]
+    assert gets.count(h.manifest.chunks[0].name) == 1
+    assert COUNTERS.get("read.singleflight_dedup") - before == 7
+
+
+# ----------------------------------------------------------- write path
+def test_upload_retries_transient_put_failures(tmp_path):
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(5)
+    tree = {"w": rng.standard_normal((4 * CS // 4,)).astype(np.float32)}
+    fstore = FaultyStore(store)
+    fstore.fail_next(2)
+    pipe = PublishPipeline(fstore, backend="numpy",
+                           retry=RetryPolicy(attempts=4, base_s=1e-4,
+                                             cap_s=1e-3, seed=2))
+    before = COUNTERS.get("retry.retries")
+    blob, stats = pipe.publish(tree, tenant="res", tenant_key=KEY,
+                               root=gc.active, chunk_size=CS)
+    pipe.close()
+    assert COUNTERS.get("retry.retries") - before >= 2
+    flat = _svc(store).open(blob, KEY).restore_tree()
+    assert np.array_equal(flat["w"], tree["w"])
+
+
+def test_upload_without_retry_propagates_transient(tmp_path):
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    tree = {"w": np.arange(CS, dtype=np.float32)}
+    fstore = FaultyStore(store)
+    fstore.fail_next(1)
+    pipe = PublishPipeline(fstore, backend="numpy")
+    with pytest.raises(TransientStoreError):
+        pipe.publish(tree, tenant="res", tenant_key=KEY,
+                     root=gc.active, chunk_size=CS)
+    pipe.close()
+
+
+def test_torn_write_scrubbed_on_startup(tmp_path):
+    store = ChunkStore(tmp_path / "store")
+    store.create_root("R1")
+    name = "abcd" * 8
+
+    def power_loss(tmp):
+        raise RuntimeError("simulated power loss mid-put")
+
+    store._crash_hook = power_loss
+    with pytest.raises(RuntimeError):
+        store.put_if_absent("R1", name, b"payload")
+    orphans = list((store.dir / "roots").glob("*/chunks/*/*.tmp-*"))
+    assert len(orphans) == 1                  # the torn temp survived
+    assert not store.has_chunk("R1", name)    # ...but was never claimed
+    before = COUNTERS.get("store.torn_writes_scrubbed")
+    store2 = ChunkStore(store.dir)            # restart: startup scrub
+    assert store2.scrubbed_tmp == 1
+    assert COUNTERS.get("store.torn_writes_scrubbed") - before == 1
+    assert not orphans[0].exists()
+    assert store2.put_if_absent("R1", name, b"payload")
+    assert store2.get_chunk("R1", name) == b"payload"
+    assert ChunkStore(store.dir).scrubbed_tmp == 0
+
+
+def test_name_index_sidecar_persists_across_pipelines(tmp_path):
+    store = ChunkStore(tmp_path / "store")
+    gc = GenerationalGC(store)
+    rng = np.random.default_rng(8)
+    tree = {"w": rng.standard_normal((4 * CS // 4,)).astype(np.float32)}
+    path = tmp_path / "names.idx"
+    p1 = PublishPipeline(store, backend="numpy", name_index_path=path)
+    blob1, stats1 = p1.publish(tree, tenant="res", tenant_key=KEY,
+                               root=gc.active, chunk_size=CS)
+    p1.close()
+    assert path.exists() and len(p1.names) == stats1.total_chunks
+    # a FRESH pipeline (new process analogue) loads the sidecar and
+    # skips re-encrypting every known-plaintext chunk
+    before = COUNTERS.get("publish.encrypt_skipped_chunks")
+    p2 = PublishPipeline(store, backend="numpy", name_index_path=path)
+    assert len(p2.names) == stats1.total_chunks
+    blob2, stats2 = p2.publish(tree, tenant="res", tenant_key=KEY,
+                               root=gc.active, chunk_size=CS)
+    p2.close()
+    assert COUNTERS.get("publish.encrypt_skipped_chunks") - before \
+        >= stats1.total_chunks
+    assert stats2.unique_chunks == 0          # everything dedup'd
+    flat = _svc(store).open(blob2, KEY).restore_tree()
+    assert np.array_equal(flat["w"], tree["w"])
+
+
+def test_name_index_sidecar_corruption_starts_empty(tmp_path):
+    path = tmp_path / "names.idx"
+    path.write_text("not hex at all\n")
+    idx = NameIndex(path=path)                # a cache, never correctness
+    assert len(idx) == 0
+    idx.put_many([(b"\x01" * 32, "aa" * 16)])
+    idx.save()
+    assert len(NameIndex(path=path)) == 1
+
+
+# ----------------------------------------------------------- peer tier
+def test_poisoned_peer_copy_deregistered(tmp_path):
+    """A holder advertising corrupt bytes must be DROPPED from the mesh
+    directory on the integrity failure — later readers and joiners must
+    not be steered back to the poisoned copy."""
+    store, root, tree, blob = _mk(tmp_path, chunks=2)
+    mesh = build_peer_mesh(ServiceConfig(), 2)
+    svc = ImageService(store, ServiceConfig(
+        l1_bytes=0, l2_nodes=0, fetch_concurrency=0, max_coldstarts=0),
+        peer=mesh.client(0))
+    h = svc.open(blob, KEY)
+    name = h.manifest.chunks[0].name
+    bad = _flip(store.get_chunk(root, name))
+    mesh.client(1).put_chunk(name, bad, source="origin")
+    assert 1 in mesh.holders(name)
+    with pytest.raises(convergent.IntegrityError):
+        h.reader.fetch_chunk(0)
+    assert mesh.holders(name) == []           # satellite fix: deregistered
+
+    # with a retry policy the same poisoning HEALS: evict + refetch from
+    # origin, and the refreshed copy re-registers under this worker
+    mesh.client(1).put_chunk(name, bad, source="origin")
+    svc2 = ImageService(store, ServiceConfig(
+        l1_bytes=0, l2_nodes=0, fetch_concurrency=0, max_coldstarts=0,
+        **_FAST_RETRY), peer=mesh.client(0))
+    plain = svc2.open(blob, KEY).reader.fetch_chunk(0)
+    assert plain == tree["w"].tobytes()[:CS]
+    assert 1 not in mesh.holders(name)
